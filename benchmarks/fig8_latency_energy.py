@@ -1,0 +1,29 @@
+"""Paper Fig 8: per-op latency and energy (sensing-phase decomposition)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.encoding import OP_SENSING_PHASES
+from repro.flash import EnergyModel, TimingModel
+
+
+def main(quick: bool = True) -> None:
+    t = TimingModel()
+    e = EnergyModel()
+    for op in ("and", "or", "not", "xnor"):
+        lat = t.read_latency_us(op)
+        en = e.read_energy_uj_kb(op)
+        emit(f"fig8_{op}", lat,
+             f"phases={OP_SENSING_PHASES[op]};energy_uj_kb={en:.3f};"
+             f"vs_and_energy={en / e.read_energy_uj_kb('and'):.2f}x")
+    # non-aligned overhead (copyback realignment, Fig 8b right)
+    non_aligned = 3 * t.t_r_avg_us + t.t_prog_us
+    emit("fig8_nonaligned_overhead", non_aligned,
+         f"copyback=2reads+prog;total_page_us={non_aligned:.0f};"
+         f"paper_band=600-800us")
+    en_na = e.mcflash_op_energy_uj_kb("and", aligned=False)
+    emit("fig8_nonaligned_energy", en_na,
+         f"uj_kb={en_na:.2f};program_dominates={en_na / e.read_energy_uj_kb('and'):.1f}x_read")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Paper Fig 9: system-level execution timelines (8 MB, 2 operands)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.flash import (TimingModel, isc_time_us, mcflash_time_us,
+                         osc_time_us)
+
+PAPER = {"osc": 2063.0, "isc": 1495.0, "mcflash": 1087.0,
+         "mcflash_nonaligned": 1807.0}
+
+
+def main(quick: bool = True) -> None:
+    t = TimingModel()
+    got = {
+        "osc": osc_time_us(t),
+        "isc": isc_time_us(t),
+        "mcflash": mcflash_time_us(t, aligned=True),
+        "mcflash_nonaligned": mcflash_time_us(t, aligned=False),
+    }
+    for name, us in got.items():
+        emit(f"fig9_{name}", us,
+             f"paper={PAPER[name]:.0f}us;delta={100 * (us / PAPER[name] - 1):+.1f}%")
+        assert abs(us - PAPER[name]) / PAPER[name] < 0.01, (name, us)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Kernel micro-benchmarks (interpret mode on CPU — correctness-shaped, the
+TPU numbers come from the §Roofline analysis of the lowered kernels)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.kernels import ops
+
+
+def main(quick: bool = True) -> None:
+    rng = np.random.default_rng(0)
+    rows = 8 if quick else 64
+    vth = jnp.asarray(rng.normal(2.0, 2.0, (rows, 131072)).astype(np.float32))
+    refs = jnp.asarray([0.1, 3.7, 1.9, 5.5], jnp.float32)
+    for kind in ("lsb", "msb", "sbr"):
+        us = timeit(lambda: jax.block_until_ready(
+            ops.mlc_sense(vth, refs, kind=kind)))
+        cells = vth.size
+        emit(f"kernel_mlc_sense_{kind}", us,
+             f"megacells_per_s={cells / us:.0f};pages={rows}")
+    stack = jnp.asarray(rng.integers(0, 2**32, (8, rows, 4096),
+                                     dtype=np.uint64).astype(np.uint32))
+    us = timeit(lambda: jax.block_until_ready(ops.bitwise_reduce(stack, op="and")))
+    emit("kernel_bitwise_reduce8", us,
+         f"gbits_per_s={stack.size * 32 / us / 1e3:.1f}")
+    words = stack[0]
+    us = timeit(lambda: jax.block_until_ready(ops.popcount_rows(words)))
+    emit("kernel_popcount", us, f"gbits_per_s={words.size * 32 / us / 1e3:.1f}")
+
+
+if __name__ == "__main__":
+    main()

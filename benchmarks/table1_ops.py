@@ -1,0 +1,43 @@
+"""Paper Table 1: read-offset plans for every bitwise op + bit-exactness."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import encoding, mcflash, vth_model
+from repro.kernels import ops as kops, ref
+
+
+def main(quick: bool = True) -> None:
+    chip = vth_model.get_chip_model()
+    key = jax.random.PRNGKey(0)
+    rows, cols = 8, 131072
+    lsb = jax.random.bernoulli(key, 0.5, (rows * cols,)).astype(jnp.uint8)
+    msb = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5,
+                               (rows * cols,)).astype(jnp.uint8)
+    vth, _ = vth_model.program_page(jax.random.fold_in(key, 2), lsb, msb, chip)
+    vth2 = vth.reshape(rows, cols)
+
+    for op in encoding.ALL_OPS:
+        if op == "not":
+            vth_n, _ = vth_model.program_page(
+                jax.random.fold_in(key, 3), jnp.zeros_like(msb), msb, chip)
+            v = vth_n.reshape(rows, cols)
+        else:
+            v = vth2
+        plan = mcflash.plan_op(op, chip)
+        packed = kops.sense_plan(v, plan)
+        got = ref.unpack_bits(packed).reshape(-1)
+        want = mcflash.expected_result(op, lsb if op != "not" else jnp.zeros_like(lsb), msb)
+        errors = int(jnp.sum(got != want))
+        us = timeit(lambda: jax.block_until_ready(kops.sense_plan(v, plan)),
+                    iters=3 if quick else 10)
+        emit(f"table1_{op}", us,
+             f"phases={plan.sensing_phases};errors={errors};plan={plan.describe().replace(',', ';')}")
+        assert errors == 0, (op, errors)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro: MCFlash (in-flash bulk bitwise processing) as a production-grade
+JAX framework — device-physics core, Pallas sensing kernels, simulated SSD
+substrate, and a multi-pod LM training/serving stack hosting MCFlash as a
+first-class storage service."""
+__version__ = "1.0.0"

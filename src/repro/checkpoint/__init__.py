@@ -1,0 +1,6 @@
+from repro.checkpoint import ckpt, delta
+from repro.checkpoint.ckpt import latest_step, restore, save
+from repro.checkpoint.delta import delta_apply, delta_encode, delta_sparsity
+
+__all__ = ["ckpt", "delta", "save", "restore", "latest_step",
+           "delta_encode", "delta_apply", "delta_sparsity"]

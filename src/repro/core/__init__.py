@@ -1,0 +1,21 @@
+"""MCFlash core: the paper's contribution as composable JAX modules.
+
+- ``encoding``: MLC Gray code, op truth tables, logical oracles.
+- ``vth_model``: device physics (program/erase, P/E cycling, retention).
+- ``sensing``: hard/shifted read, soft-bit read, inverse read.
+- ``mcflash``: Table-1 read-offset planning + op execution.
+- ``rber``: raw-bit-error-rate measurement harness.
+"""
+from repro.core import (calibration, encoding, mcflash, rber, sensing,
+                        tlc, vth_model)
+from repro.core.encoding import ALL_OPS, OP_SENSING_PHASES, TWO_OPERAND_OPS
+from repro.core.mcflash import ReadPlan, execute_plan, mcflash_op, plan_op
+from repro.core.vth_model import CHIP_MODELS, ChipModel, get_chip_model
+
+__all__ = [
+    "encoding", "vth_model", "sensing", "mcflash", "rber",
+    "calibration", "tlc",
+    "ALL_OPS", "TWO_OPERAND_OPS", "OP_SENSING_PHASES",
+    "ChipModel", "CHIP_MODELS", "get_chip_model",
+    "ReadPlan", "plan_op", "execute_plan", "mcflash_op",
+]

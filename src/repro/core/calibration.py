@@ -1,0 +1,96 @@
+"""Dynamic read-offset calibration (paper §5.4, Fig 7).
+
+The optimal offset depends on endurance/aging: commercial chips ship
+factory-calibrated references, and §5.4 notes "the read-offset values can
+be dynamically optimized based on cell state, spatial location, and aging
+conditions".  This module implements that loop: sweep the op's moving
+reference across its window on a sacrificial calibration page, measure
+RBER per offset (Fig 7's curve), and return the window **centre** (most
+drift headroom) — the same read-retry machinery real SSD firmware uses,
+repurposed for MCFlash ops.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mcflash, vth_model
+from repro.core.mcflash import ReadPlan
+from repro.core.vth_model import ChipModel
+
+
+@dataclasses.dataclass
+class CalibrationResult:
+    op: str
+    n_pe: float
+    offsets_v: list[float]
+    rber_pct: list[float]
+    best_offset_v: float        # window centre (or argmin RBER if no window)
+    zero_window_v: float        # width of the zero-RBER window (0 if closed)
+
+    def __str__(self) -> str:
+        return (f"{self.op.upper()} @ {self.n_pe:.0f} P/E: best offset "
+                f"{self.best_offset_v:+.2f} V, zero-window "
+                f"{self.zero_window_v:.2f} V")
+
+
+def _moving_ref(plan: ReadPlan) -> int:
+    """Index (into plan.refs) of the op-defining reference to calibrate."""
+    return {"lsb": 0, "msb": 0, "sbr": 2}[plan.kind]
+
+
+def _rber_at(plan: ReadPlan, ref_idx: int, offset: float, vth, want) -> float:
+    refs = list(plan.refs)
+    refs[ref_idx] = refs[ref_idx] + offset
+    shifted = ReadPlan(plan.op, plan.kind, tuple(refs),
+                       plan.sensing_phases, plan.uses_inverse)
+    got = mcflash.execute_plan(shifted, vth)
+    return 100.0 * float(jnp.mean((got != want).astype(jnp.float32)))
+
+
+def calibrate(op: str, chip: ChipModel, *, n_pe: float = 0.0,
+              retention_hours: float = 0.0, n_bits: int = 1 << 18,
+              span_v: float = 0.6, steps: int = 13,
+              seed: int = 0) -> CalibrationResult:
+    """Sweep the op's moving reference +/- span_v around the factory plan."""
+    plan = mcflash.plan_op(op, chip)
+    ref_idx = _moving_ref(plan)
+    key = jax.random.PRNGKey(seed)
+    lsb = jax.random.bernoulli(key, 0.5, (n_bits,)).astype(jnp.uint8)
+    msb = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5,
+                               (n_bits,)).astype(jnp.uint8)
+    if op == "not":
+        lsb = jnp.zeros_like(lsb)
+    vth, _ = vth_model.program_page(jax.random.fold_in(key, 2), lsb, msb,
+                                    chip, n_pe=n_pe,
+                                    retention_hours=retention_hours)
+    want = mcflash.expected_result(op, lsb, msb)
+
+    offsets = np.linspace(-span_v, span_v, steps)
+    curve = [_rber_at(plan, ref_idx, float(o), vth, want) for o in offsets]
+
+    zero = [o for o, r in zip(offsets, curve) if r == 0.0]
+    if zero:
+        best = float((min(zero) + max(zero)) / 2)
+        window = float(max(zero) - min(zero))
+    else:
+        best = float(offsets[int(np.argmin(curve))])
+        window = 0.0
+    return CalibrationResult(op, n_pe, [float(o) for o in offsets],
+                             curve, best, window)
+
+
+def calibrated_plan(op: str, chip: ChipModel, *, n_pe: float = 0.0,
+                    retention_hours: float = 0.0, **kw) -> ReadPlan:
+    """Return the op's plan with the wear-optimal reference substituted."""
+    cal = calibrate(op, chip, n_pe=n_pe, retention_hours=retention_hours, **kw)
+    plan = mcflash.plan_op(op, chip)
+    idx = _moving_ref(plan)
+    refs = list(plan.refs)
+    refs[idx] = chip.quantize_ref(refs[idx] + cal.best_offset_v,
+                                  0 if plan.kind != "lsb" else 1)
+    return ReadPlan(plan.op, plan.kind, tuple(refs),
+                    plan.sensing_phases, plan.uses_inverse)

@@ -1,0 +1,98 @@
+"""MLC logical data encoding (paper §2.2, Fig 2).
+
+MLC NAND stores two bits per cell across four threshold-voltage states
+L0..L3.  Gray coding maps the shared (LSB, MSB) page bits to states so that
+adjacent states differ in exactly one bit:
+
+    state   L0   L1   L2   L3
+    LSB      1    1    0    0
+    MSB      1    0    0    1
+
+The LSB page is decoded with a single reference V_REF1 (between L1 and L2);
+the MSB page with two references V_REF0 (L0|L1) and V_REF2 (L2|L3):
+``msb = (vth < V_REF0) | (vth > V_REF2)``.
+
+Everything here is pure jnp so it shards/vmaps/jits freely.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# State indices.
+L0, L1, L2, L3 = 0, 1, 2, 3
+NUM_STATES = 4
+
+# Per-state logical bits, Gray coded (index = state).
+LSB_OF_STATE = jnp.array([1, 1, 0, 0], dtype=jnp.uint8)
+MSB_OF_STATE = jnp.array([1, 0, 0, 1], dtype=jnp.uint8)
+
+# (lsb, msb) -> state lookup, flattened as lsb*2 + msb.
+# (0,0)->L2  (0,1)->L3  (1,0)->L1  (1,1)->L0
+_STATE_OF_BITS = jnp.array([L2, L3, L1, L0], dtype=jnp.uint8)
+
+# Expected read result per state for every MCFlash op (paper Fig 4 + Table 1).
+# op -> (r(L0), r(L1), r(L2), r(L3)).  NOT is defined on L2/L3 only (the LSB
+# page is initialised all-zero first); entries for L0/L1 are never exercised
+# but set to the logical complement of an all-zero LSB co-operand.
+OP_TRUTH = {
+    "and":  (1, 0, 0, 0),
+    "or":   (1, 1, 0, 1),
+    "xnor": (1, 0, 1, 0),
+    "not":  (0, 0, 1, 0),   # NOT(MSB) with LSB==0 -> states L2,L3 only
+    "nand": (0, 1, 1, 1),
+    "nor":  (0, 0, 1, 0),
+    "xor":  (0, 1, 0, 1),
+}
+
+# Number of sensing phases per op (paper §5.5): AND = 1 (LSB read), OR/NOT = 2
+# (MSB read), XNOR via SBR = 4 (two MSB-style reads).  Inverse-read variants
+# cost the same as their base op.
+OP_SENSING_PHASES = {
+    "and": 1, "or": 2, "not": 2, "xnor": 4,
+    "nand": 1, "nor": 2, "xor": 4,
+}
+
+TWO_OPERAND_OPS = ("and", "or", "xnor", "nand", "nor", "xor")
+ALL_OPS = TWO_OPERAND_OPS + ("not",)
+
+
+def encode_mlc(lsb_bits: jnp.ndarray, msb_bits: jnp.ndarray) -> jnp.ndarray:
+    """Map per-cell (LSB, MSB) bits -> MLC state index (uint8 in [0,4))."""
+    idx = lsb_bits.astype(jnp.uint8) * 2 + msb_bits.astype(jnp.uint8)
+    return _STATE_OF_BITS[idx]
+
+
+def decode_lsb(states: jnp.ndarray) -> jnp.ndarray:
+    return LSB_OF_STATE[states]
+
+
+def decode_msb(states: jnp.ndarray) -> jnp.ndarray:
+    return MSB_OF_STATE[states]
+
+
+def logical_op(op: str, a: jnp.ndarray, b: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Bit-level oracle for an MCFlash op on uint8/bool bit arrays."""
+    a = a.astype(jnp.uint8)
+    if op == "not":
+        return (1 - a).astype(jnp.uint8)
+    assert b is not None, f"op {op!r} needs two operands"
+    b = b.astype(jnp.uint8)
+    if op == "and":
+        return a & b
+    if op == "or":
+        return a | b
+    if op == "xor":
+        return a ^ b
+    if op == "xnor":
+        return (1 - (a ^ b)).astype(jnp.uint8)
+    if op == "nand":
+        return (1 - (a & b)).astype(jnp.uint8)
+    if op == "nor":
+        return (1 - (a | b)).astype(jnp.uint8)
+    raise ValueError(f"unknown op {op!r}")
+
+
+def expected_read(op: str, states: jnp.ndarray) -> jnp.ndarray:
+    """Expected MCFlash read result per cell given stored states."""
+    table = jnp.array(OP_TRUTH[op], dtype=jnp.uint8)
+    return table[states]

@@ -1,0 +1,121 @@
+"""MCFlash op engine: Table-1 read-offset planning + execution.
+
+Given a chip model, each bitwise op is compiled into a :class:`ReadPlan` — the
+set of (quantized, range-clamped) read references and the sensing mechanism
+(LSB read / MSB read / SBR), exactly mirroring paper Table 1:
+
+=====  =========================================  ==============
+op     mechanism                                  sensing phases
+=====  =========================================  ==============
+AND    LSB read, VREF1 -> L0|L1 valley                   1
+OR     MSB read, VREF0 -> L1|L2 valley                   2
+NOT    MSB read, VREF0 -> L2|L3 valley, VREF2 -> >L3     2
+XNOR   SBR: neg = default MSB, pos = LSB-mimic           4
+NAND   inverse-read(AND)  | direct: VREF0 -> <L0         1 | 2
+NOR    inverse-read(OR)   | direct SBR w/ VREF0 -> <L0   2 | 4
+XOR    inverse-read(XNOR) | direct SBR w/ VREF0 -> <L0   4 | 4
+=====  =========================================  ==============
+
+The "direct" variants need VREF0 *below the erase distribution*; the DAC
+offset range cannot traverse the wide L0 window, so the reference clamps and
+those ops show >5% RBER (paper §4.3) — reproduced here, not papered over.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding, sensing
+from repro.core.vth_model import ChipModel
+
+
+@dataclasses.dataclass(frozen=True)
+class ReadPlan:
+    op: str
+    kind: str                      # 'lsb' | 'msb' | 'sbr'
+    refs: Tuple[float, ...]        # quantized absolute reference voltages
+    sensing_phases: int
+    uses_inverse: bool = False     # apply chip inverse-read to the result
+
+    def describe(self) -> str:
+        refs = ", ".join(f"{r:+.2f}V" for r in self.refs)
+        inv = " +inverse-read" if self.uses_inverse else ""
+        return f"{self.op.upper():5s} [{self.kind}{inv}] refs=({refs}) phases={self.sensing_phases}"
+
+
+def _targets(chip: ChipModel) -> dict[str, float]:
+    """Absolute reference-voltage targets derived from the state geometry."""
+    v0, v1, v2 = chip.vref_default
+    margin = v2 - chip.prog_hi[1]              # valley half-width above L2
+    return {
+        "P01": v0,                             # L0|L1 valley (default VREF0)
+        "P12": v1,                             # L1|L2 valley (default VREF1)
+        "P23": v2,                             # L2|L3 valley (default VREF2)
+        "P3p": chip.prog_hi[2] + margin,       # above L3
+        "P0m": chip.erase_hi - 4.0 * chip.erase_sigma,  # below L0 (unreachable)
+    }
+
+
+def plan_op(op: str, chip: ChipModel, use_inverse_read: bool = True) -> ReadPlan:
+    """Compile an op into quantized read references (Table 1)."""
+    t = _targets(chip)
+    q = chip.quantize_ref
+
+    if op == "and":
+        return ReadPlan(op, "lsb", (q(t["P01"], 1),), 1)
+    if op == "or":
+        return ReadPlan(op, "msb", (q(t["P12"], 0), q(t["P23"], 2)), 2)
+    if op == "not":
+        return ReadPlan(op, "msb", (q(t["P23"], 0), q(t["P3p"], 2)), 2)
+    if op == "xnor":
+        return ReadPlan(op, "sbr",
+                        (q(t["P01"], 0), q(t["P23"], 2),      # negative sensing
+                         q(t["P12"], 0), q(t["P3p"], 2)),     # positive sensing
+                        4)
+    if op in ("nand", "nor", "xor"):
+        if use_inverse_read:
+            base = {"nand": "and", "nor": "or", "xor": "xnor"}[op]
+            p = plan_op(base, chip)
+            return ReadPlan(op, p.kind, p.refs, p.sensing_phases, uses_inverse=True)
+        # Direct variants: require VREF0 below L0 -> clamps at the DAC range.
+        if op == "nand":
+            return ReadPlan(op, "msb", (q(t["P0m"], 0), q(t["P01"], 2)), 2)
+        if op == "nor":
+            return ReadPlan(op, "sbr",
+                            (q(t["P0m"], 0), q(t["P23"], 2),
+                             q(t["P12"], 0), q(t["P3p"], 2)), 4)
+        return ReadPlan(op, "sbr",
+                        (q(t["P0m"], 0), q(t["P12"], 2),
+                         q(t["P01"], 0), q(t["P23"], 2)), 4)
+    raise ValueError(f"unknown op {op!r}")
+
+
+def execute_plan(plan: ReadPlan, vth: jnp.ndarray) -> jnp.ndarray:
+    """Run the sensing sequence of a plan on a Vth array -> result bits."""
+    if plan.kind == "lsb":
+        bits = sensing.lsb_read(vth, plan.refs[0])
+    elif plan.kind == "msb":
+        bits = sensing.msb_read(vth, plan.refs[0], plan.refs[1])
+    elif plan.kind == "sbr":
+        bits = sensing.soft_bit_read(vth, plan.refs[0:2], plan.refs[2:4])
+    else:
+        raise ValueError(plan.kind)
+    if plan.uses_inverse:
+        bits = sensing.inverse_read(bits)
+    return bits
+
+
+def mcflash_op(op: str, vth: jnp.ndarray, chip: ChipModel,
+               use_inverse_read: bool = True) -> jnp.ndarray:
+    """One-shot: plan + execute an MCFlash bitwise op on a programmed page."""
+    return execute_plan(plan_op(op, chip, use_inverse_read), vth)
+
+
+def expected_result(op: str, lsb_bits: jnp.ndarray, msb_bits: jnp.ndarray) -> jnp.ndarray:
+    """Logical oracle over the stored operands (A=LSB page, B=MSB page)."""
+    if op == "not":
+        return encoding.logical_op("not", msb_bits)
+    return encoding.logical_op(op, lsb_bits, msb_bits)

@@ -1,0 +1,70 @@
+"""RBER measurement harness (paper §5.1-5.4).
+
+Programs random operand pages at a given (chip, N_PE, retention) point, runs
+an MCFlash op, and compares against the logical oracle.  Vectorised over
+pages; jit-compiled; chunked so hundreds of megacells fit on the CPU host.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mcflash, vth_model
+from repro.core.vth_model import ChipModel
+
+PAGE_BITS = 16 * 1024 * 8  # 16 kB pages (paper §5.2)
+
+
+@dataclasses.dataclass
+class RberResult:
+    op: str
+    pages: int
+    bits: int
+    errors: int
+
+    @property
+    def rber_pct(self) -> float:
+        return 100.0 * self.errors / max(self.bits, 1)
+
+    def __str__(self) -> str:
+        return (f"{self.op.upper():5s} pages={self.pages} bits={self.bits} "
+                f"errors={self.errors} RBER={self.rber_pct:.6f}%")
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "op", "chip", "n_bits", "n_pe", "retention_hours", "use_inverse_read"))
+def _trial(key: jax.Array, *, op: str, chip: ChipModel, n_bits: int,
+           n_pe: float, retention_hours: float,
+           use_inverse_read: bool = True) -> jnp.ndarray:
+    """Program one batch of cells, run `op`, return the error count."""
+    k_ops, k_prog = jax.random.split(key)
+    bits = jax.random.bernoulli(k_ops, 0.5, (2, n_bits))
+    lsb, msb = bits[0].astype(jnp.uint8), bits[1].astype(jnp.uint8)
+    if op == "not":
+        lsb = jnp.zeros_like(lsb)  # NOT requires all-zero LSB init (paper §4.2)
+    vth, _ = vth_model.program_page(k_prog, lsb, msb, chip,
+                                    n_pe=n_pe, retention_hours=retention_hours)
+    got = mcflash.mcflash_op(op, vth, chip, use_inverse_read=use_inverse_read)
+    want = mcflash.expected_result(op, lsb, msb)
+    return jnp.sum((got != want).astype(jnp.int32))
+
+
+def measure_rber(op: str, chip: ChipModel, *, pages: int = 64,
+                 n_pe: float = 0.0, retention_hours: float = 0.0,
+                 use_inverse_read: bool = True, seed: int = 0,
+                 pages_per_chunk: int = 16) -> RberResult:
+    """Measure RBER of `op` over `pages` 16 kB pages."""
+    errors = 0
+    done = 0
+    base = jax.random.PRNGKey(seed)
+    while done < pages:
+        chunk = min(pages_per_chunk, pages - done)
+        key = jax.random.fold_in(base, done)
+        errors += int(_trial(key, op=op, chip=chip, n_bits=chunk * PAGE_BITS,
+                             n_pe=n_pe, retention_hours=retention_hours,
+                             use_inverse_read=use_inverse_read))
+        done += chunk
+    return RberResult(op=op, pages=pages, bits=pages * PAGE_BITS, errors=errors)

@@ -1,0 +1,39 @@
+"""Sensing primitives: hard read, shifted read, SBR, inverse read (paper §4.1).
+
+These are the *only* mechanisms MCFlash uses — all of them user-mode commands
+on COTS chips.  Each returns per-cell bits (uint8).  The packed/high-volume
+variants live in repro.kernels (Pallas); these pure-jnp forms are the
+reference semantics and are what the RBER experiments run on.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lsb_read(vth: jnp.ndarray, vref1: float | jnp.ndarray) -> jnp.ndarray:
+    """LSB page read: one sensing phase.  bit = (vth < VREF1)."""
+    return (vth < vref1).astype(jnp.uint8)
+
+
+def msb_read(vth: jnp.ndarray, vref0: float | jnp.ndarray,
+             vref2: float | jnp.ndarray) -> jnp.ndarray:
+    """MSB page read: two sensing phases.  bit = (vth < VREF0) | (vth > VREF2)."""
+    return ((vth < vref0) | (vth > vref2)).astype(jnp.uint8)
+
+
+def soft_bit_read(vth: jnp.ndarray,
+                  neg_refs: tuple[float, float],
+                  pos_refs: tuple[float, float]) -> jnp.ndarray:
+    """SBR: chip-internal XNOR of two MSB-style reads (paper Fig 3b).
+
+    ``neg_refs``/``pos_refs`` are the (VREF0, VREF2) pairs of the negative and
+    positive sensing phases.  Four sensing phases total.
+    """
+    neg = msb_read(vth, *neg_refs)
+    pos = msb_read(vth, *pos_refs)
+    return (1 - (neg ^ pos)).astype(jnp.uint8)
+
+
+def inverse_read(bits: jnp.ndarray) -> jnp.ndarray:
+    """Inverse read: the chip returns complemented page-buffer data [41]."""
+    return (1 - bits).astype(jnp.uint8)

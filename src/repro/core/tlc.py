@@ -1,0 +1,127 @@
+"""TLC extension (paper §7 / TCFlash [47]): three-operand bitwise ops in
+Tri-Level-Cell NAND, and the "reduced-MLC" robust mode.
+
+TLC stores 3 bits/cell over 8 Vth states; three operands co-locate on the
+shared LSB/CSB/MSB pages of one wordline.  Gray code (adjacent states
+differ in one bit):
+
+    state  L0 L1 L2 L3 L4 L5 L6 L7
+    LSB     1  1  1  1  0  0  0  0
+    CSB     1  1  0  0  0  0  1  1
+    MSB     1  0  0  1  1  0  0  1
+
+- 3-operand AND  = A&B&C is 1 only at L0=(1,1,1): ONE shifted-read phase
+  with the reference in the L0|L1 valley — a k=3 op at k=2's AND latency.
+- 3-operand OR   = A|B|C is 0 only at L5=(0,0,0): MSB-style 2-phase read
+  with references in the L4|L5 and L5|L6 valleys.
+- Reduced-MLC mode: program only the widely-spaced states {L0, L2, L5, L7}
+  (fix the decode to 2 bits) — margins ~2x native TLC, recovering zero
+  RBER on worn blocks (§7: "enlarges the voltage margin between states").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# (LSB, CSB, MSB) per state — valid Gray code.
+TLC_LSB = jnp.array([1, 1, 1, 1, 0, 0, 0, 0], dtype=jnp.uint8)
+TLC_CSB = jnp.array([1, 1, 0, 0, 0, 0, 1, 1], dtype=jnp.uint8)
+TLC_MSB = jnp.array([1, 0, 0, 1, 1, 0, 0, 1], dtype=jnp.uint8)
+
+# (lsb, csb, msb) -> state, flattened as lsb*4 + csb*2 + msb
+_STATE_OF_BITS = jnp.zeros(8, jnp.uint8)
+for _s in range(8):
+    _i = int(TLC_LSB[_s]) * 4 + int(TLC_CSB[_s]) * 2 + int(TLC_MSB[_s])
+    _STATE_OF_BITS = _STATE_OF_BITS.at[_i].set(_s)
+
+
+@dataclasses.dataclass(frozen=True)
+class TLCChipModel:
+    """8-state chip: same total window as MLC, ~half the inter-state gaps."""
+    part_number: str = "TLC-176L-CT"
+    # programmed states L1..L7 verify windows (L0 = erase, half-normal)
+    prog_lo: Tuple[float, ...] = (0.20, 0.95, 1.70, 2.45, 3.20, 3.95, 4.70)
+    prog_hi: Tuple[float, ...] = (0.55, 1.30, 2.05, 2.80, 3.55, 4.30, 5.05)
+    prog_sigma: float = 0.07
+    erase_hi: float = -0.5
+    erase_sigma: float = 2.6
+    # drift: same physics as the MLC model, per-state uniform for simplicity
+    drift_s: float = 0.17
+    drift_alpha: float = 0.11
+
+    def valley(self, lo_state: int) -> float:
+        """Reference target in the (lo_state | lo_state+1) valley."""
+        hi = self.erase_hi if lo_state == 0 else self.prog_hi[lo_state - 1]
+        lo_next = self.prog_lo[lo_state]
+        return 0.5 * (hi + lo_next)
+
+
+def encode_tlc(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    idx = (a.astype(jnp.uint8) * 4 + b.astype(jnp.uint8) * 2
+           + c.astype(jnp.uint8))
+    return _STATE_OF_BITS[idx]
+
+
+def program_tlc(key: jax.Array, states: jnp.ndarray, chip: TLCChipModel,
+                n_pe: float = 0.0) -> jnp.ndarray:
+    z = jax.random.normal(key, states.shape, dtype=jnp.float32)
+    mu = jnp.array((0.0,) + tuple(
+        (lo + hi) / 2 for lo, hi in zip(chip.prog_lo, chip.prog_hi)),
+        jnp.float32)
+    lo = jnp.array((0.0,) + chip.prog_lo, jnp.float32)
+    hi = jnp.array((0.0,) + chip.prog_hi, jnp.float32)
+    s = states.astype(jnp.int32)
+    prog = jnp.clip(mu[s] + chip.prog_sigma * z, lo[s], hi[s])
+    erased = chip.erase_hi - jnp.abs(z) * chip.erase_sigma
+    vth = jnp.where(s == 0, erased, prog)
+    if n_pe > 0:
+        sigma = chip.drift_s * (n_pe / 1500.0) ** chip.drift_alpha
+        z2 = jax.random.normal(jax.random.fold_in(key, 1), vth.shape,
+                               dtype=jnp.float32)
+        vth = vth + sigma * z2
+    return vth
+
+
+def and3_read(vth: jnp.ndarray, chip: TLCChipModel) -> jnp.ndarray:
+    """3-operand AND: single phase, reference in the L0|L1 valley."""
+    return (vth < chip.valley(0)).astype(jnp.uint8)
+
+
+def or3_read(vth: jnp.ndarray, chip: TLCChipModel) -> jnp.ndarray:
+    """3-operand OR: 2-phase read bracketing L5=(0,0,0)."""
+    return ((vth < chip.valley(4)) | (vth > chip.valley(5))).astype(jnp.uint8)
+
+
+# ----------------------------- reduced-MLC mode -----------------------------
+
+# use widely spaced TLC states as 4 MLC levels: L0, L2, L5, L7
+_REDUCED_STATES = jnp.array([0, 2, 5, 7], dtype=jnp.uint8)
+# bits follow the MLC Gray convention on the chosen states:
+#   (lsb,msb): L0=(1,1) L2=(1,0) L5=(0,0) L7=(0,1)
+_RED_OF_BITS = {(1, 1): 0, (1, 0): 1, (0, 0): 2, (0, 1): 3}
+
+
+def encode_reduced(lsb: jnp.ndarray, msb: jnp.ndarray) -> jnp.ndarray:
+    idx = lsb.astype(jnp.uint8) * 2 + msb.astype(jnp.uint8)
+    lut = jnp.zeros(4, jnp.uint8)
+    for (l, m), r in _RED_OF_BITS.items():
+        lut = lut.at[l * 2 + m].set(r)
+    return _REDUCED_STATES[lut[idx]]
+
+
+def reduced_and_read(vth: jnp.ndarray, chip: TLCChipModel) -> jnp.ndarray:
+    """MLC-style AND on reduced states: ref in the wide L0|L2 valley."""
+    ref = 0.5 * (chip.erase_hi + chip.prog_lo[1])     # between L0 and L2
+    return (vth < ref).astype(jnp.uint8)
+
+
+def reduced_or_read(vth: jnp.ndarray, chip: TLCChipModel) -> jnp.ndarray:
+    """MLC-style OR: 1 only outside L5 (the (0,0) state).  The lower
+    reference sits mid-way between the OCCUPIED states L2 and L5 (L3/L4 are
+    unused in reduced mode — the whole point of the wider margins)."""
+    lo = 0.5 * (chip.prog_hi[1] + chip.prog_lo[4])    # L2|L5 wide valley
+    hi = 0.5 * (chip.prog_hi[4] + chip.prog_lo[6])    # L5|L7 valley
+    return ((vth < lo) | (vth > hi)).astype(jnp.uint8)

@@ -1,0 +1,145 @@
+"""Threshold-voltage (Vth) device model for MLC 3D NAND (paper §2.2, §5.3-5.4).
+
+The model reproduces the physics the paper's measurements hinge on:
+
+* **Fresh pages**: program-verify clamps every programmed state Ln into a hard
+  window [lo_n, hi_n]; erase-verify clamps L0 *below* hi_0 with a wide
+  half-normal lower tail (the erase distribution is much broader — the reason
+  direct NAND/NOR/XOR cannot reach below it within the DAC range).  Because
+  the windows are disjoint with >=`gap` volts of margin, fresh blocks give a
+  structurally *zero* RBER for the in-range ops — matching Table 2.
+* **P/E cycling** adds post-verify drift: a sub-log sigma widening (tunnel-ox
+  trap accumulation) plus small mean shifts (net charge trapping raises the
+  erased state).  Calibrated so RBER ~ 1e-4 % at 1.5k P/E and < 0.015 % at
+  10k P/E (Table 2 / §1).
+* **Retention** shifts programmed states *down* (charge loss), hitting L3
+  hardest — which is why NOT and XNOR degrade fastest in Fig 6.
+
+All sampling is jax.random-based and jit/shard friendly; a page of 131072
+cells is just a tensor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipModel:
+    """Technology/part-number parameters.  Voltages in volts."""
+
+    part_number: str
+    description: str                       # e.g. "64-Layer FG"
+    # Programmed-state verify windows (L1..L3): [lo, hi] hard bounds, and the
+    # Gaussian (mu, sigma) that is clipped into them.
+    prog_lo: Tuple[float, float, float] = (0.7, 2.5, 4.3)
+    prog_hi: Tuple[float, float, float] = (1.3, 3.1, 4.9)
+    prog_mu: Tuple[float, float, float] = (1.0, 2.8, 4.6)
+    prog_sigma: Tuple[float, float, float] = (0.13, 0.13, 0.14)
+    # Erase state: hard upper bound (erase verify) + half-normal spread below.
+    erase_hi: float = -0.5
+    erase_sigma: float = 2.6
+    # Factory-calibrated default read references (valley centres).
+    vref_default: Tuple[float, float, float] = (0.1, 1.9, 3.7)  # VREF0/1/2
+    # Read-offset DAC: step size and +/- code range (paper §4.3: range is
+    # sized for the programmed window; it cannot traverse the erase window).
+    dac_step_v: float = 0.04
+    dac_range_codes: int = 95              # => +/- 3.8 V
+    # Cycling drift: sigma_d = wear * s_n * (NPE/1500)^alpha   (NPE > 0)
+    drift_s: Tuple[float, float, float, float] = (0.165, 0.175, 0.170, 0.175)
+    drift_alpha: float = 0.11
+    # Cycling mean shift (V): erased state creeps up with trapped charge.
+    cyc_mu_shift: Tuple[float, float, float, float] = (0.035, 0.012, 0.008, -0.010)
+    # Retention: mean downshift per ln(1 + t/24h), L3 worst; plus widening.
+    ret_mu_shift: Tuple[float, float, float, float] = (0.010, -0.012, -0.022, -0.040)
+    ret_sigma: Tuple[float, float, float, float] = (0.020, 0.018, 0.022, 0.034)
+    # Part-to-part wear multiplier (Table 2 spread across part numbers).
+    wear_scale: float = 1.0
+
+    @property
+    def dac_range_v(self) -> float:
+        return self.dac_step_v * self.dac_range_codes
+
+    def quantize_ref(self, target_v: float, which: int) -> float:
+        """Quantize an absolute reference target to the DAC grid, clamping the
+        *offset* from the factory default to the user-accessible range."""
+        default = self.vref_default[which]
+        code = round((target_v - default) / self.dac_step_v)
+        code = max(-self.dac_range_codes, min(self.dac_range_codes, code))
+        return default + code * self.dac_step_v
+
+
+# The five parts of Table 2.  FG parts wear slightly faster at the low states,
+# newer 176L CT parts are tighter when fresh but show a larger XNOR tail.
+CHIP_MODELS = {
+    "MT29F256G08EBHAFJ4": ChipModel("MT29F256G08EBHAFJ4", "64-Layer FG", wear_scale=1.08),
+    "MT29F512G08EEHAFJ4": ChipModel("MT29F512G08EEHAFJ4", "64-Layer FG", wear_scale=1.02),
+    "MT29F1T08EELEEJ4":   ChipModel("MT29F1T08EELEEJ4", "176-Layer CT", wear_scale=0.95),
+    "MT29F1T08EELKEJ4":   ChipModel("MT29F1T08EELKEJ4", "176-Layer CT", wear_scale=0.93),
+    "MT29F4T08GMLCEJ4":   ChipModel("MT29F4T08GMLCEJ4", "176-Layer CT", wear_scale=1.00),
+}
+DEFAULT_CHIP = "MT29F1T08EELEEJ4"
+
+
+def get_chip_model(name: str | None = None) -> ChipModel:
+    return CHIP_MODELS[name or DEFAULT_CHIP]
+
+
+def sample_fresh_vth(key: jax.Array, states: jnp.ndarray, chip: ChipModel) -> jnp.ndarray:
+    """Sample post-verify Vth for each cell given its MLC state (fresh page)."""
+    z = jax.random.normal(key, states.shape, dtype=jnp.float32)
+    # Programmed states: clipped Gaussians inside hard verify windows.
+    mu = jnp.array((0.0,) + chip.prog_mu, dtype=jnp.float32)
+    sig = jnp.array((0.0,) + chip.prog_sigma, dtype=jnp.float32)
+    lo = jnp.array((0.0,) + chip.prog_lo, dtype=jnp.float32)
+    hi = jnp.array((0.0,) + chip.prog_hi, dtype=jnp.float32)
+    s = states.astype(jnp.int32)
+    prog = jnp.clip(mu[s] + sig[s] * z, lo[s], hi[s])
+    # Erase state: half-normal below the erase-verify level.
+    erased = chip.erase_hi - jnp.abs(z) * chip.erase_sigma
+    return jnp.where(s == encoding.L0, erased, prog)
+
+
+def drift_terms(chip: ChipModel, n_pe: float, retention_hours: float
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-state (mean_shift, sigma) of post-verify drift."""
+    n_pe = float(n_pe)
+    t = float(retention_hours)
+    cyc = (n_pe / 1500.0) ** chip.drift_alpha if n_pe > 0 else 0.0
+    ret = jnp.log1p(t / 24.0)
+    # Retention accelerates on worn oxide.
+    ret_acc = 1.0 + n_pe / 4000.0
+    s = jnp.array(chip.drift_s, dtype=jnp.float32)
+    sigma = chip.wear_scale * jnp.sqrt(
+        (s * cyc) ** 2 + (jnp.array(chip.ret_sigma) * ret * ret_acc) ** 2
+    )
+    mu = (jnp.array(chip.cyc_mu_shift) * jnp.log1p(n_pe / 1000.0)
+          + jnp.array(chip.ret_mu_shift) * ret * ret_acc)
+    return mu.astype(jnp.float32), sigma.astype(jnp.float32)
+
+
+def apply_wear(key: jax.Array, vth: jnp.ndarray, states: jnp.ndarray,
+               chip: ChipModel, n_pe: float, retention_hours: float) -> jnp.ndarray:
+    """Add cycling/retention drift on top of fresh (verified) Vth."""
+    if n_pe <= 0 and retention_hours <= 0:
+        return vth
+    mu, sigma = drift_terms(chip, n_pe, retention_hours)
+    s = states.astype(jnp.int32)
+    z = jax.random.normal(key, vth.shape, dtype=jnp.float32)
+    return vth + mu[s] + sigma[s] * z
+
+
+def program_page(key: jax.Array, lsb_bits: jnp.ndarray, msb_bits: jnp.ndarray,
+                 chip: ChipModel, n_pe: float = 0.0,
+                 retention_hours: float = 0.0) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Program shared LSB/MSB pages -> (vth, states)."""
+    k1, k2 = jax.random.split(key)
+    states = encoding.encode_mlc(lsb_bits, msb_bits)
+    vth = sample_fresh_vth(k1, states, chip)
+    vth = apply_wear(k2, vth, states, chip, n_pe, retention_hours)
+    return vth, states

@@ -1,0 +1,4 @@
+from repro.data.bitmap_pipeline import BitmapFilter
+from repro.data.tokens import DataConfig, TokenPipeline
+
+__all__ = ["TokenPipeline", "DataConfig", "BitmapFilter"]

@@ -1,0 +1,56 @@
+"""MCFlash-backed bitmap-filtered data selection.
+
+The framework-level integration of the paper's technique: per-sample quality
+/ dedup / domain bitmaps live on the simulated SSD as aligned shared pages;
+sample selection for a training epoch evaluates the filter predicate as an
+**in-flash AND chain** (one MCFlash sense per pair + packed combine), so
+only the final selection bitmap — not the constituent bitmaps — crosses to
+the host.  Mirrors the paper's bitmap-index case study (§6.2) inside the
+training stack.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.flash.device import FlashDevice
+from repro.flash.ftl import FTL
+from repro.kernels import ops as kops
+
+
+class BitmapFilter:
+    """Holds named per-sample bitmaps in flash; evaluates AND-chains in-flash."""
+
+    def __init__(self, n_samples: int, device: FlashDevice | None = None):
+        # round up to whole pages
+        self.device = device or FlashDevice(seed=17)
+        self.ftl = FTL(self.device)
+        page_bits = self.device.config.page_bits
+        self.n_samples = n_samples
+        self.n_bits = ((n_samples + page_bits - 1) // page_bits) * page_bits
+        self._names: list[str] = []
+
+    def add_pair(self, name_a: str, bits_a: np.ndarray,
+                 name_b: str, bits_b: np.ndarray) -> None:
+        """Store two filter bitmaps co-located (aligned LSB/MSB pages)."""
+        a = self._pad(bits_a)
+        b = self._pad(bits_b)
+        self.ftl.write_pair_aligned(name_a, jnp.asarray(a), name_b, jnp.asarray(b))
+        self._names += [name_a, name_b]
+
+    def _pad(self, bits: np.ndarray) -> np.ndarray:
+        assert bits.shape[0] == self.n_samples
+        out = np.zeros(self.n_bits, np.uint8)
+        out[: self.n_samples] = bits.astype(np.uint8)
+        return out
+
+    def select(self, pairs: list[tuple[str, str]]) -> np.ndarray:
+        """In-flash AND chain over filter pairs -> boolean sample mask."""
+        packed = self.ftl.mcflash_chain("and", pairs)
+        bits = kops.unpack_bits(packed.reshape(1, -1))[0]
+        return np.asarray(bits[: self.n_samples]).astype(bool)
+
+    def count(self, pairs: list[tuple[str, str]]) -> int:
+        """Selection cardinality via the popcount kernel (host bit-count)."""
+        packed = self.ftl.mcflash_chain("and", pairs)
+        return int(kops.popcount_rows(packed.reshape(1, -1))[0])

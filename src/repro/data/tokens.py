@@ -1,0 +1,52 @@
+"""Deterministic, resumable synthetic token pipeline.
+
+Production data loaders must be (a) deterministic given (seed, step) so a
+restarted job resumes mid-epoch with no duplicate/dropped batches, and
+(b) cheap to skip-ahead.  This pipeline derives every batch purely from
+``fold_in(seed, step)`` — O(1) resume at any step, no iterator state to
+checkpoint beyond the step counter itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+
+class TokenPipeline:
+    """Synthetic corpus with a Zipf-ish marginal and Markov-ish structure —
+    enough signal that a ~100M model's loss visibly drops in a few hundred
+    steps (examples/train_lm.py), while remaining fully deterministic."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self._base = jax.random.PRNGKey(cfg.seed)
+
+    def batch_at(self, step: int) -> dict:
+        cfg = self.cfg
+        key = jax.random.fold_in(self._base, step)
+        k1, k2 = jax.random.split(key)
+        # Zipf marginal via exponential quantisation
+        u = jax.random.exponential(k1, (cfg.global_batch, cfg.seq_len))
+        toks = jnp.clip((u * cfg.vocab / 8.0), 1, cfg.vocab - 1).astype(jnp.int32)
+        # inject learnable bigram structure: every even position repeats
+        # f(prev) = (prev * 31 + 7) % vocab with high probability
+        follow = (toks[:, :-1] * 31 + 7) % (cfg.vocab - 1) + 1
+        gate = jax.random.bernoulli(k2, 0.7, follow.shape)
+        toks = toks.at[:, 1:].set(jnp.where(gate, follow, toks[:, 1:]))
+        return {"tokens": toks}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

@@ -1,0 +1,25 @@
+"""Simulated SSD substrate hosting MCFlash.
+
+- ``geometry``: SSD/NAND organisation (16 ch x 8 die x 4 plane, 16 kB pages).
+- ``device``: functional NAND array (Vth state, plans via Pallas kernels,
+  P/E tracking, time/energy ledger).
+- ``ftl``: allocation, wear leveling, operand alignment, vector compute.
+- ``timing`` / ``energy``: calibrated latency & energy models (§5.5, Fig 8/9).
+- ``system``: k-operand OSC/ISC/ParaBit/Flash-Cosmos/MCFlash comparison model.
+"""
+from repro.flash.device import FlashDevice, Ledger
+from repro.flash.energy import EnergyModel
+from repro.flash.ftl import FTL
+from repro.flash.geometry import PAGE_BITS, SSDConfig
+from repro.flash.system import (SystemModel, Workload, bitmap_index,
+                                image_encryption, image_segmentation,
+                                speedup_table)
+from repro.flash.timing import (TimingModel, isc_time_us, mcflash_time_us,
+                                osc_time_us)
+
+__all__ = [
+    "FlashDevice", "Ledger", "FTL", "SSDConfig", "PAGE_BITS",
+    "TimingModel", "EnergyModel", "SystemModel", "Workload",
+    "osc_time_us", "isc_time_us", "mcflash_time_us",
+    "image_segmentation", "image_encryption", "bitmap_index", "speedup_table",
+]

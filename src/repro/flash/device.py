@@ -1,0 +1,167 @@
+"""Functional simulated NAND flash device.
+
+Holds per-wordline Vth tensors (sparsely, only programmed wordlines),
+executes MCFlash read plans through the Pallas sense kernels, tracks P/E
+cycles per block, and keeps a command **ledger** (time + energy) so that
+application workloads derive their latency/energy from the *actual simulated
+command stream* rather than hand-waved constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mcflash, vth_model
+from repro.core.encoding import OP_SENSING_PHASES
+from repro.core.vth_model import ChipModel
+from repro.flash.energy import EnergyModel
+from repro.flash.geometry import SSDConfig
+from repro.flash.timing import TimingModel
+from repro.kernels import ops as kops
+
+WordlineKey = Tuple[int, int, int]  # (plane, block, wordline)
+
+
+@dataclasses.dataclass
+class Ledger:
+    """Per-resource busy-time accounting + total energy."""
+    die_busy_us: Dict[int, float] = dataclasses.field(default_factory=dict)
+    channel_busy_us: Dict[int, float] = dataclasses.field(default_factory=dict)
+    host_busy_us: float = 0.0
+    energy_uj: float = 0.0
+    commands: int = 0
+
+    def add_die(self, die: int, us: float, uj: float = 0.0) -> None:
+        self.die_busy_us[die] = self.die_busy_us.get(die, 0.0) + us
+        self.energy_uj += uj
+        self.commands += 1
+
+    def add_channel(self, ch: int, us: float) -> None:
+        self.channel_busy_us[ch] = self.channel_busy_us.get(ch, 0.0) + us
+
+    def add_host(self, us: float) -> None:
+        self.host_busy_us += us
+
+    @property
+    def makespan_us(self) -> float:
+        """Lower-bound makespan: resources of one kind run in parallel."""
+        die = max(self.die_busy_us.values(), default=0.0)
+        ch = max(self.channel_busy_us.values(), default=0.0)
+        return max(die, ch, self.host_busy_us)
+
+
+class FlashDevice:
+    """One simulated multi-plane NAND chip set (the §6 SSD's raw layer)."""
+
+    def __init__(self, chip: ChipModel | None = None,
+                 config: SSDConfig | None = None,
+                 timing: TimingModel | None = None,
+                 energy: EnergyModel | None = None,
+                 seed: int = 0):
+        self.chip = chip or vth_model.get_chip_model()
+        self.config = config or SSDConfig()
+        self.timing = timing or TimingModel()
+        self.energy = energy or EnergyModel()
+        self._vth: Dict[WordlineKey, jnp.ndarray] = {}
+        self._operands: Dict[WordlineKey, Tuple[jnp.ndarray, jnp.ndarray]] = {}
+        self.pe_counts: Dict[Tuple[int, int], int] = {}
+        self.ledger = Ledger()
+        self._key = jax.random.PRNGKey(seed)
+        self._page_bits = self.config.page_bits
+
+    # -- geometry helpers ---------------------------------------------------
+    def _die_of_plane(self, plane: int) -> int:
+        return plane // self.config.planes_per_die
+
+    def _channel_of_plane(self, plane: int) -> int:
+        return self._die_of_plane(plane) // self.config.dies_per_channel
+
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    # -- commands -----------------------------------------------------------
+    def program_shared(self, wl: WordlineKey, lsb_bits: jnp.ndarray,
+                       msb_bits: jnp.ndarray, retention_hours: float = 0.0) -> None:
+        """Program the shared LSB/MSB pages of one wordline (16 kB each)."""
+        assert lsb_bits.shape == (self._page_bits,), lsb_bits.shape
+        plane, block, _ = wl
+        n_pe = self.pe_counts.get((plane, block), 0)
+        vth, _ = vth_model.program_page(
+            self._next_key(), lsb_bits, msb_bits, self.chip,
+            n_pe=float(n_pe), retention_hours=retention_hours)
+        self._vth[wl] = vth
+        self._operands[wl] = (lsb_bits.astype(jnp.uint8), msb_bits.astype(jnp.uint8))
+        die = self._die_of_plane(plane)
+        # MLC shared-page program: 2 pages' worth of ISPP
+        self.ledger.add_die(die, 2 * self.timing.t_prog_us,
+                            2 * self.energy.e_prog_uj_kb * self.config.page_kb)
+
+    def mcflash_read(self, wl: WordlineKey, op: str, packed: bool = True,
+                     switch_op: bool = True) -> jnp.ndarray:
+        """Execute an MCFlash bitwise op on a programmed wordline."""
+        vth = self._vth[wl]
+        plan = mcflash.plan_op(op, self.chip)
+        plane = wl[0]
+        die = self._die_of_plane(plane)
+        us = self.timing.op_latency_us(op, switch_op=switch_op)
+        uj = self.energy.read_energy_uj_kb(op) * self.config.page_kb
+        self.ledger.add_die(die, us, uj)
+        packed_bits = kops.sense_plan(vth.reshape(1, -1), plan)
+        return packed_bits[0] if packed else kops.unpack_bits(packed_bits)[0]
+
+    def page_read(self, wl: WordlineKey, which: str = "lsb",
+                  packed: bool = True) -> jnp.ndarray:
+        """Standard (default-reference) page read."""
+        vth = self._vth[wl].reshape(1, -1)
+        v0, v1, v2 = self.chip.vref_default
+        die = self._die_of_plane(wl[0])
+        if which == "lsb":
+            out = kops.mlc_sense(vth, [v1, 0, 0, 0], kind="lsb")
+            us, uj = self.timing.read_latency_us("and"), self.energy.read_energy_uj_kb("and")
+        else:
+            out = kops.mlc_sense(vth, [v0, v2, 0, 0], kind="msb")
+            us, uj = self.timing.read_latency_us("or"), self.energy.read_energy_uj_kb("or")
+        self.ledger.add_die(die, us, uj * self.config.page_kb)
+        return out[0] if packed else kops.unpack_bits(out)[0]
+
+    def copyback_align(self, src_a: WordlineKey, src_b: WordlineKey,
+                       dst: WordlineKey, which_a: str = "lsb",
+                       which_b: str = "lsb") -> None:
+        """Realign two scattered operands onto one shared wordline (Fig 9e).
+
+        Uses the on-die cache register (no external transfer): two page reads
+        + one shared-page copyback program.
+        """
+        a = self.page_read(src_a, which_a, packed=False)
+        b = self.page_read(src_b, which_b, packed=False)
+        self.program_shared(dst, a, b)
+
+    def erase_block(self, plane: int, block: int) -> None:
+        self.pe_counts[(plane, block)] = self.pe_counts.get((plane, block), 0) + 1
+        for wl in [k for k in self._vth if k[0] == plane and k[1] == block]:
+            del self._vth[wl]
+            self._operands.pop(wl, None)
+        # block erase ~ 3.5 ms, energy ~ 2x page program
+        self.ledger.add_die(self._die_of_plane(plane), 3500.0,
+                            2 * self.energy.e_prog_uj_kb * self.config.page_kb)
+
+    def dma_to_controller(self, wl: WordlineKey) -> None:
+        """Account a page transfer NAND -> controller on the wordline's channel."""
+        ch = self._channel_of_plane(wl[0])
+        us = self.config.page_bytes / (self.config.channel_bw_gbps * 1e3)  # bytes/GBps -> us
+        self.ledger.add_channel(ch, us)
+
+    def ext_to_host(self, n_bytes: int) -> None:
+        self.ledger.add_host(n_bytes / (self.config.host_bw_gbps * 1e3))
+
+    # -- oracles for verification -------------------------------------------
+    def stored_operands(self, wl: WordlineKey) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return self._operands[wl]
+
+    def expected(self, wl: WordlineKey, op: str) -> jnp.ndarray:
+        lsb, msb = self._operands[wl]
+        return mcflash.expected_result(op, lsb, msb)

@@ -1,0 +1,143 @@
+"""Flash translation layer: allocation, wear leveling, operand alignment.
+
+The FTL is where MCFlash integrates into an SSD (paper §5.1): shared-page
+operand placement is a *placement policy*, and the bitwise op is dispatched
+as a read with a per-op SET_FEATURE offset set.  This module provides:
+
+- wear-levelled block allocation (least-P/E free block per plane),
+- striped bit-vector placement across all planes (the §6 layout),
+- aligned operand-pair writes (A -> LSB page, B -> MSB page, same wordline),
+- runtime copyback realignment for scattered operands,
+- vector-level MCFlash compute (op over two named vectors) and chained
+  reductions with controller-side combining of per-pair partials.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+
+from repro.flash.device import FlashDevice, WordlineKey
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass
+class VectorMeta:
+    name: str
+    n_bits: int
+    pages: List[WordlineKey]          # striped page placement
+    role: str                          # 'lsb' | 'msb' (which shared page)
+
+
+class FTL:
+    def __init__(self, device: FlashDevice):
+        self.device = device
+        self.cfg = device.config
+        self._next_wl: Dict[int, Tuple[int, int]] = {}   # plane -> (block, wl)
+        self._wear: Dict[Tuple[int, int], int] = {}
+        self.vectors: Dict[str, VectorMeta] = {}
+        self._pair_of: Dict[str, str] = {}
+
+    # -- allocation ----------------------------------------------------------
+    def allocate_wordline(self, plane: int) -> WordlineKey:
+        block, wl = self._next_wl.get(plane, (0, 0))
+        key = (plane, block, wl)
+        wl += 1
+        if wl >= self.cfg.pages_per_block // 2:          # wordlines per block
+            block, wl = block + 1, 0
+        self._next_wl[plane] = (block, wl)
+        return key
+
+    # -- placement -----------------------------------------------------------
+    def _paginate(self, bits: jnp.ndarray) -> List[jnp.ndarray]:
+        pb = self.cfg.page_bits
+        n = int(bits.shape[0])
+        pad = (-n) % pb
+        if pad:
+            bits = jnp.pad(bits, (0, pad))
+        return [bits[i * pb:(i + 1) * pb] for i in range(bits.shape[0] // pb)]
+
+    def write_pair_aligned(self, name_a: str, bits_a: jnp.ndarray,
+                           name_b: str, bits_b: jnp.ndarray) -> None:
+        """Write operands A,B co-located on shared wordlines, striped across planes."""
+        pages_a = self._paginate(bits_a)
+        pages_b = self._paginate(bits_b)
+        assert len(pages_a) == len(pages_b), "aligned operands must match in size"
+        placement: List[WordlineKey] = []
+        for i, (pa, pb_) in enumerate(zip(pages_a, pages_b)):
+            plane = i % self.cfg.planes
+            wl = self.allocate_wordline(plane)
+            self.device.program_shared(wl, pa, pb_)
+            placement.append(wl)
+        self.vectors[name_a] = VectorMeta(name_a, int(bits_a.shape[0]), placement, "lsb")
+        self.vectors[name_b] = VectorMeta(name_b, int(bits_b.shape[0]), placement, "msb")
+        self._pair_of[name_a] = name_b
+        self._pair_of[name_b] = name_a
+
+    def write_scattered(self, name: str, bits: jnp.ndarray, role: str = "lsb") -> None:
+        """Write a single vector without a co-located partner (needs
+        realignment before MCFlash compute) — stored with all-zero co-page."""
+        pages = self._paginate(bits)
+        placement = []
+        for i, p in enumerate(pages):
+            plane = i % self.cfg.planes
+            wl = self.allocate_wordline(plane)
+            zero = jnp.zeros_like(p)
+            if role == "lsb":
+                self.device.program_shared(wl, p, zero)
+            else:
+                self.device.program_shared(wl, zero, p)
+            placement.append(wl)
+        self.vectors[name] = VectorMeta(name, int(bits.shape[0]), placement, role)
+
+    def align(self, name_a: str, name_b: str) -> str:
+        """Copyback-realign two scattered vectors into an aligned pair; returns
+        the name of the merged pair (A becomes LSB, B becomes MSB)."""
+        ma, mb = self.vectors[name_a], self.vectors[name_b]
+        assert len(ma.pages) == len(mb.pages)
+        placement = []
+        for wa, wb in zip(ma.pages, mb.pages):
+            dst = self.allocate_wordline(wa[0])
+            self.device.copyback_align(wa, wb, dst, ma.role, mb.role)
+            placement.append(dst)
+        self.vectors[name_a] = VectorMeta(name_a, ma.n_bits, placement, "lsb")
+        self.vectors[name_b] = VectorMeta(name_b, mb.n_bits, placement, "msb")
+        self._pair_of[name_a] = name_b
+        self._pair_of[name_b] = name_a
+        return name_a
+
+    # -- compute ---------------------------------------------------------------
+    def mcflash_compute(self, op: str, name_a: str, name_b: str,
+                        to_host: bool = True) -> jnp.ndarray:
+        """In-flash `op` over an aligned pair -> packed result vector."""
+        ma = self.vectors[name_a]
+        if self._pair_of.get(name_a) != name_b:
+            self.align(name_a, name_b)
+            ma = self.vectors[name_a]
+        outs = []
+        for i, wl in enumerate(ma.pages):
+            switch = i == 0  # one SET_FEATURE per op batch
+            outs.append(self.device.mcflash_read(wl, op, packed=True, switch_op=switch))
+            self.device.dma_to_controller(wl)
+        if to_host:
+            self.device.ext_to_host(len(ma.pages) * self.cfg.page_bytes // 8)
+        packed = jnp.stack(outs)
+        return packed.reshape(-1)[: ma.n_bits // 32]
+
+    def mcflash_chain(self, op: str, pair_names: List[Tuple[str, str]],
+                      to_host: bool = True) -> jnp.ndarray:
+        """k-operand chain (op in and/or/xor): in-flash op per aligned pair,
+        controller combines partials with the packed bitwise kernel (no host
+        round-trips)."""
+        assert op in ("and", "or", "xor"), "chains are associative ops only"
+        partials = [self.mcflash_compute(op, a, b, to_host=False)
+                    for a, b in pair_names]
+        if len(partials) == 1:
+            res = partials[0]
+        else:
+            stack = jnp.stack(partials).reshape(len(partials), 1, -1)
+            res = kops.bitwise_reduce(stack, op=op).reshape(-1)
+        if to_host:
+            self.device.ext_to_host(res.shape[-1] * 4)
+        return res

@@ -1,0 +1,53 @@
+"""Packed multi-operand bitwise chain Pallas kernel.
+
+Implements the bulk AND/OR/XOR chains of the paper's application studies
+(bitmap indices = AND over x day-vectors; encryption = XOR with key) over
+lane-major packed uint32 pages.  The operand count N is static and unrolled;
+one VMEM-resident accumulator tile is reused across the chain so HBM traffic
+is N reads + 1 write per tile — the same single-buffer discipline the NAND
+page-register chain uses on chip.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 8
+COL_TILE = 512
+
+
+def _chain_kernel(stack_ref, out_ref, *, n: int, op: str, invert: bool):
+    acc = stack_ref[0]
+    for k in range(1, n):                      # static unroll over operands
+        nxt = stack_ref[k]
+        if op == "and":
+            acc = acc & nxt
+        elif op == "or":
+            acc = acc | nxt
+        elif op == "xor":
+            acc = acc ^ nxt
+        else:
+            raise ValueError(op)
+    if invert:
+        acc = ~acc
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("op", "invert", "interpret"))
+def bitwise_reduce(stack: jnp.ndarray, *, op: str, invert: bool = False,
+                   interpret: bool = True) -> jnp.ndarray:
+    """(N, R, W) packed uint32 -> (R, W): op-reduce over the N operands."""
+    n, r, w = stack.shape
+    assert r % ROW_TILE == 0 and w % COL_TILE == 0, (r, w)
+    grid = (r // ROW_TILE, w // COL_TILE)
+    return pl.pallas_call(
+        functools.partial(_chain_kernel, n=n, op=op, invert=invert),
+        grid=grid,
+        in_specs=[pl.BlockSpec((n, ROW_TILE, COL_TILE), lambda i, j: (0, i, j))],
+        out_specs=pl.BlockSpec((ROW_TILE, COL_TILE), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, w), jnp.uint32),
+        interpret=interpret,
+    )(stack)

@@ -1,0 +1,74 @@
+"""Fused MLC sense + bit-pack Pallas kernel — the MCFlash hot loop.
+
+NAND senses a 16 kB wordline into the page buffer in one shot; the TPU
+analogue streams (8, 4096) Vth tiles HBM->VMEM, applies the (shifted)
+reference comparisons of the selected read kind, and emits lane-major packed
+uint32 words (see repro.kernels.ref for the packing convention).  Fusing the
+compare/XNOR/pack keeps bytes moved at the roofline floor:
+4 B/cell in + 1/8 B/cell out.
+
+Read references are *data* (scalar-prefetched to SMEM), so switching between
+AND/OR/XNOR/NOT re-uses one compiled kernel per read kind — mirroring how the
+real chip switches ops purely via SET_FEATURE register writes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+WORD_BITS = 32
+TILE_COLS = LANES * WORD_BITS  # 4096
+ROW_TILE = 8                   # sublane-aligned row tile
+
+
+def _sense_kernel(refs_ref, vth_ref, out_ref, *, kind: str, invert: bool):
+    v = vth_ref[...]                                   # (ROW_TILE, TILE_COLS) f32
+    if kind == "lsb":
+        bits = v < refs_ref[0]
+    elif kind == "msb":
+        bits = (v < refs_ref[0]) | (v > refs_ref[1])
+    elif kind == "sbr":
+        neg = (v < refs_ref[0]) | (v > refs_ref[1])
+        pos = (v < refs_ref[2]) | (v > refs_ref[3])
+        bits = jnp.logical_not(neg ^ pos)
+    else:
+        raise ValueError(kind)
+    if invert:
+        bits = jnp.logical_not(bits)
+    # Lane-major pack: reduction over the 32 sublane groups, lanes stay 128.
+    b = bits.astype(jnp.uint32).reshape(v.shape[0], WORD_BITS, LANES)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)[None, :, None]
+    out_ref[...] = jnp.sum(b << shifts, axis=1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "invert", "interpret"))
+def mlc_sense(vth: jnp.ndarray, refs: jnp.ndarray, *, kind: str,
+              invert: bool = False, interpret: bool = True) -> jnp.ndarray:
+    """Sense a (R, C) Vth array into packed (R, C//32) uint32 bits.
+
+    R % 8 == 0 and C % 4096 == 0 (use repro.kernels.ops.pad_rows otherwise).
+    """
+    r, c = vth.shape
+    assert r % ROW_TILE == 0, f"rows {r} must be a multiple of {ROW_TILE}"
+    assert c % TILE_COLS == 0, f"cols {c} must be a multiple of {TILE_COLS}"
+    refs = jnp.asarray(refs, jnp.float32).reshape(4)
+    grid = (r // ROW_TILE, c // TILE_COLS)
+    return pl.pallas_call(
+        functools.partial(_sense_kernel, kind=kind, invert=invert),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                # index maps receive the scalar-prefetch operand as a trailing arg
+                pl.BlockSpec((ROW_TILE, TILE_COLS), lambda i, j, refs: (i, j)),
+            ],
+            out_specs=pl.BlockSpec((ROW_TILE, LANES), lambda i, j, refs: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((r, c // WORD_BITS), jnp.uint32),
+        interpret=interpret,
+    )(refs, vth)

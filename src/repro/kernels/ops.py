@@ -1,0 +1,76 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; TPU v5e
+is the compilation *target*) and to False on a real TPU backend.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bitops as _bitops
+from repro.kernels import mlc_sense as _mlc
+from repro.kernels import popcount as _pop
+from repro.kernels import ref as kernel_ref
+
+LANES = kernel_ref.LANES
+WORD_BITS = kernel_ref.WORD_BITS
+TILE_COLS = kernel_ref.TILE_COLS
+ROW_TILE = _mlc.ROW_TILE
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pad_rows(x: jnp.ndarray, multiple: int = ROW_TILE) -> tuple[jnp.ndarray, int]:
+    """Pad axis 0 to a multiple; returns (padded, original_rows)."""
+    r = x.shape[0]
+    pad = (-r) % multiple
+    if pad:
+        x = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    return x, r
+
+
+def mlc_sense(vth: jnp.ndarray, refs, *, kind: str, invert: bool = False,
+              interpret: bool | None = None) -> jnp.ndarray:
+    """Fused sense+pack: (R, C) Vth -> (R, C//32) packed uint32."""
+    if interpret is None:
+        interpret = _default_interpret()
+    padded, r = pad_rows(vth)
+    out = _mlc.mlc_sense(padded, jnp.asarray(refs, jnp.float32),
+                         kind=kind, invert=invert, interpret=interpret)
+    return out[:r]
+
+
+def sense_plan(vth: jnp.ndarray, plan, *, interpret: bool | None = None) -> jnp.ndarray:
+    """Run a repro.core.mcflash.ReadPlan through the Pallas sense kernel."""
+    refs = list(plan.refs) + [0.0] * (4 - len(plan.refs))
+    return mlc_sense(vth, refs, kind=plan.kind, invert=plan.uses_inverse,
+                     interpret=interpret)
+
+
+def bitwise_reduce(stack: jnp.ndarray, *, op: str, invert: bool = False,
+                   interpret: bool | None = None) -> jnp.ndarray:
+    """(N, R, W) packed uint32 -> (R, W) op-reduction over operands."""
+    if interpret is None:
+        interpret = _default_interpret()
+    n, r, w = stack.shape
+    pad_r = (-r) % _bitops.ROW_TILE
+    pad_w = (-w) % _bitops.COL_TILE
+    if pad_r or pad_w:
+        stack = jnp.pad(stack, ((0, 0), (0, pad_r), (0, pad_w)))
+    out = _bitops.bitwise_reduce(stack, op=op, invert=invert, interpret=interpret)
+    return out[:r, :w]
+
+
+def popcount_rows(words: jnp.ndarray, *, interpret: bool | None = None) -> jnp.ndarray:
+    """(R, W) packed uint32 -> (R,) int32 popcounts."""
+    if interpret is None:
+        interpret = _default_interpret()
+    padded, r = pad_rows(words)
+    return _pop.popcount_rows(padded, interpret=interpret)[:r]
+
+
+pack_bits = kernel_ref.pack_bits
+unpack_bits = kernel_ref.unpack_bits

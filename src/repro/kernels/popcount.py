@@ -1,0 +1,55 @@
+"""Popcount-reduce Pallas kernel (bitmap-index bit-count offload).
+
+Per-row population count of packed uint32 pages via SWAR arithmetic, with a
+lane-resident partial-sum accumulator revisited across column tiles — the
+final 128-lane reduction happens outside the kernel (it is O(R*128)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+ROW_TILE = 8
+COL_TILE = 512
+
+
+def _popcount(v: jnp.ndarray) -> jnp.ndarray:
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((v * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def _popcount_kernel(words_ref, out_ref):
+    j = pl.program_id(1)
+    pc = _popcount(words_ref[...])                       # (ROW_TILE, COL_TILE)
+    part = jnp.sum(pc.reshape(ROW_TILE, COL_TILE // LANES, LANES), axis=1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(j > 0)
+    def _acc():
+        out_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def popcount_rows(words: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """(R, W) packed uint32 -> (R,) int32 row popcounts."""
+    r, w = words.shape
+    assert r % ROW_TILE == 0 and w % COL_TILE == 0, (r, w)
+    grid = (r // ROW_TILE, w // COL_TILE)
+    lanes = pl.pallas_call(
+        _popcount_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROW_TILE, COL_TILE), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((ROW_TILE, LANES), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, LANES), jnp.int32),
+        interpret=interpret,
+    )(words)
+    return jnp.sum(lanes, axis=-1, dtype=jnp.int32)

@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Bit-packing convention (TPU-native, lane-major):
+  A tile of ``TILE_COLS = 4096`` cells packs into 128 uint32 words.  Word
+  ``w`` of a tile holds bit ``k`` from cell column ``k*128 + w`` — i.e. the
+  pack stride is the TPU lane width (128), so the pack reduction runs along
+  sublanes and the minor (lane) dimension stays 128-wide.  Pack/unpack are
+  exact inverses; all kernels, the flash device, and the bitmap pipeline use
+  this one convention.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LANES = 128
+WORD_BITS = 32
+TILE_COLS = LANES * WORD_BITS  # 4096 cells -> 128 uint32 words
+
+
+def pack_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """(R, C) {0,1} -> (R, C // 32) uint32, lane-major within 4096-col tiles."""
+    r, c = bits.shape
+    assert c % TILE_COLS == 0, f"cols {c} must be a multiple of {TILE_COLS}"
+    tiles = c // TILE_COLS
+    b = bits.astype(jnp.uint32).reshape(r, tiles, WORD_BITS, LANES)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)[None, None, :, None]
+    words = jnp.sum(b << shifts, axis=2, dtype=jnp.uint32)  # (r, tiles, LANES)
+    return words.reshape(r, tiles * LANES)
+
+
+def unpack_bits(words: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`pack_bits`."""
+    r, w = words.shape
+    assert w % LANES == 0
+    tiles = w // LANES
+    x = words.reshape(r, tiles, 1, LANES)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)[None, None, :, None]
+    bits = (x >> shifts) & jnp.uint32(1)
+    return bits.reshape(r, tiles * TILE_COLS).astype(jnp.uint8)
+
+
+def mlc_sense(vth: jnp.ndarray, refs: jnp.ndarray, kind: str,
+              invert: bool = False) -> jnp.ndarray:
+    """Oracle for the fused sense+pack kernel.
+
+    vth: (R, C) float32, C % 4096 == 0.   refs: (4,) float32 —
+      kind='lsb' uses refs[0]; 'msb' uses refs[0:2] (VREF0, VREF2);
+      'sbr' uses refs[0:2] as negative and refs[2:4] as positive sensing.
+    Returns packed uint32 (R, C // 32).
+    """
+    if kind == "lsb":
+        bits = vth < refs[0]
+    elif kind == "msb":
+        bits = (vth < refs[0]) | (vth > refs[1])
+    elif kind == "sbr":
+        neg = (vth < refs[0]) | (vth > refs[1])
+        pos = (vth < refs[2]) | (vth > refs[3])
+        bits = ~(neg ^ pos)
+    else:
+        raise ValueError(kind)
+    if invert:
+        bits = ~bits
+    return pack_bits(bits.astype(jnp.uint8))
+
+
+def bitwise_reduce(stack: jnp.ndarray, op: str, invert: bool = False) -> jnp.ndarray:
+    """Oracle for the packed multi-operand chain: (N, R, W) uint32 -> (R, W)."""
+    acc = stack[0]
+    for n in range(1, stack.shape[0]):
+        if op == "and":
+            acc = acc & stack[n]
+        elif op == "or":
+            acc = acc | stack[n]
+        elif op == "xor":
+            acc = acc ^ stack[n]
+        else:
+            raise ValueError(op)
+    if invert:
+        acc = ~acc
+    return acc
+
+
+def popcount_words(words: jnp.ndarray) -> jnp.ndarray:
+    """Per-word popcount of uint32 (SWAR bit tricks)."""
+    v = words.astype(jnp.uint32)
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((v * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def popcount_rows(words: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the popcount-reduce kernel: (R, W) uint32 -> (R,) int32."""
+    return jnp.sum(popcount_words(words), axis=-1, dtype=jnp.int32)

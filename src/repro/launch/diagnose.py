@@ -1,0 +1,97 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# Per-shape cost breakdown for one dry-run cell: top collective contributors
+# and top HBM-bytes contributors, with while-loop trip multipliers applied.
+#
+#   PYTHONPATH=src python -m repro.launch.diagnose --arch mixtral-8x7b \
+#       --shape train_4k [--multi-pod]
+
+import argparse                       # noqa: E402
+from collections import Counter      # noqa: E402
+
+import jax                            # noqa: E402
+
+from repro.configs import SHAPES, get_config              # noqa: E402
+from repro.launch import hlo_analysis as H                # noqa: E402
+from repro.launch.mesh import make_production_mesh        # noqa: E402
+from repro.train import step as step_lib                  # noqa: E402
+
+
+def comp_multipliers(m: H.HloModule) -> dict[str, int]:
+    mults: dict[str, int] = {}
+
+    def walk(name, mult):
+        mults[name] = mults.get(name, 0) + mult
+        for ins in m.computations.get(name, []):
+            if ins.opcode == "while":
+                body = H._BODY_RE.search(ins.rest)
+                t = 1
+                mt = H._TRIP_RE.search(ins.rest)
+                if mt:
+                    t = int(mt.group(1))
+                if body:
+                    walk(body.group(1), mult * t)
+            else:
+                tgt = H._CALLS_RE.search(ins.rest) or H._TO_APPLY_RE.search(ins.rest)
+                if tgt and tgt.group(1) in m.computations:
+                    walk(tgt.group(1), mult)
+
+    walk(m.entry, 1)
+    return mults
+
+
+def breakdown(compiled, top: int = 14):
+    m = H.HloModule(compiled.as_text())
+    w = H.CostWalker(m)
+    mults = comp_multipliers(m)
+    coll, mem = Counter(), Counter()
+    for cname, mult in mults.items():
+        instrs = m.computations[cname]
+        table = {i.name: i.shape for i in instrs}
+        for ins in instrs:
+            base = ins.opcode.replace("-start", "").replace("-done", "")
+            if base in H._COLLECTIVES and not ins.opcode.endswith("-done"):
+                ops_ = w._operand_shapes(ins, table)
+                opb = sum(H._shape_bytes(s) for s in ops_)
+                res = H._shape_bytes(ins.shape)
+                traffic = {"all-gather": res, "all-reduce": 2 * opb,
+                           "reduce-scatter": opb, "all-to-all": opb,
+                           "collective-permute": opb}[base]
+                meta = ins.rest.split("metadata=")[-1][:70] if "metadata=" in ins.rest else ""
+                coll[(base, ins.shape[:48], meta[:48])] += traffic * mult
+            else:
+                c = w._instr_cost(ins, table, top_level=True)
+                if c.bytes:
+                    mem[(ins.opcode, ins.shape[:48])] += c.bytes * mult
+    print("== top collectives (per-device traffic/step) ==")
+    for (k, shape, meta), v in coll.most_common(top):
+        print(f"  {v:.3e}  {k:18s} {shape}  {meta}")
+    print("== top HBM traffic (per-device bytes/step) ==")
+    for (k, shape), v in mem.most_common(top):
+        print(f"  {v:.3e}  {k:22s} {shape}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+    sh = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    b = step_lib.aot_bundle(cfg, sh, mesh)
+    donate = (0, 1) if sh.step == "train" else (2,)
+    with mesh:
+        compiled = jax.jit(b["fn"], in_shardings=b["in_shardings"],
+                           out_shardings=b["out_shardings"],
+                           donate_argnums=donate).lower(*b["args"]).compile()
+    r = H.analyze(compiled)
+    print(f"{args.arch} {args.shape}: compute {r.compute_s:.3f}s  "
+          f"memory {r.memory_s:.3f}s  collective {r.collective_s:.3f}s")
+    breakdown(compiled)
+
+
+if __name__ == "__main__":
+    main()

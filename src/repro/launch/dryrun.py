@@ -1,0 +1,154 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: AOT-lower + compile every (arch x shape) cell on the
+# production meshes (16x16 single-pod, 2x16x16 two-pod), print
+# memory_analysis() (proves it fits) + cost_analysis() (roofline terms),
+# parse collective bytes from the partitioned HLO, and persist one JSON
+# artifact per cell under benchmarks/artifacts/dryrun/.
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b \
+#       --shape train_4k --mesh single
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+import argparse        # noqa: E402
+import json            # noqa: E402
+import time            # noqa: E402
+import traceback       # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax             # noqa: E402
+
+from repro.configs import REGISTRY, SHAPES, get_config, shapes_for  # noqa: E402
+from repro.launch import hlo_analysis                               # noqa: E402
+from repro.launch.mesh import make_production_mesh                  # noqa: E402
+from repro.models.specs import count_params                         # noqa: E402
+from repro.models import lm                                         # noqa: E402
+from repro.train import step as step_lib                            # noqa: E402
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D (train) / 2*N*D (inference) with N = non-embedding params."""
+    specs = lm.build_specs(cfg)
+    n_total = count_params(specs)
+    n_embed = cfg.vocab * cfg.d_model
+    n = n_total - n_embed
+    if cfg.n_experts > 0:
+        # active fraction of expert weights
+        moe_frac = cfg.top_k / cfg.n_experts
+        expert_params = cfg.repeats * cfg.n_experts * 3 * cfg.d_model * cfg.d_ff
+        n = n - expert_params + moe_frac * expert_params
+    if shape.step == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.step == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: Path = ARTIFACT_DIR, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = f"{arch}__{shape_name}__{mesh_name}"
+    t0 = time.time()
+    bundle = step_lib.aot_bundle(cfg, shape, mesh)
+    # donate state buffers: params+opt for train, caches for prefill/decode —
+    # the step is in-place at scale, and memory_analysis must reflect that.
+    donate = (0, 1) if shape.step == "train" else (2,)
+    with mesh:
+        lowered = jax.jit(bundle["fn"],
+                          in_shardings=bundle["in_shardings"],
+                          out_shardings=bundle["out_shardings"],
+                          donate_argnums=donate).lower(*bundle["args"])
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        roof = hlo_analysis.analyze(compiled)
+    dt = time.time() - t0
+
+    mem_d = {
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+    }
+    peak = mem_d["argument_bytes"] + mem_d["output_bytes"] + mem_d["temp_bytes"] \
+        - mem_d["alias_bytes"]
+    mflops = model_flops(cfg, shape)
+    chips = 512 if multi_pod else 256
+    record = {
+        "cell": cell, "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": chips,
+        "step": shape.step,
+        "compile_s": round(dt, 1),
+        "memory": mem_d,
+        "peak_bytes_per_device": peak,
+        "fits_16GB": bool(peak < 16 * 2**30),
+        "roofline": roof.to_dict(),
+        "model_flops_global": mflops,
+        "model_flops_per_device": mflops / chips,
+        "useful_compute_ratio": (mflops / chips) / max(roof.flops, 1.0),
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{cell}.json").write_text(json.dumps(record, indent=1))
+    if verbose:
+        print(f"[OK] {cell}: compile {dt:.0f}s  peak/dev "
+              f"{peak/2**30:.2f} GiB  flops/dev {roof.flops:.3e}  "
+              f"bytes/dev {roof.bytes_accessed:.3e}  coll/dev "
+              f"{roof.coll_bytes:.3e}  bottleneck={roof.bottleneck}", flush=True)
+    return record
+
+
+def all_cells() -> list[tuple[str, str]]:
+    cells = []
+    for arch, cfg in REGISTRY.items():
+        for shape_name in shapes_for(cfg):
+            cells.append((arch, shape_name))
+    return cells
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = all_cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch, shape_name in cells:
+        for multi in meshes:
+            mesh_name = "pod2x16x16" if multi else "pod16x16"
+            path = ARTIFACT_DIR / f"{arch}__{shape_name}__{mesh_name}.json"
+            if args.skip_existing and path.exists():
+                print(f"[skip] {path.name}", flush=True)
+                continue
+            try:
+                run_cell(arch, shape_name, multi)
+            except Exception as e:  # record and continue: failures are bugs
+                failures.append((arch, shape_name, multi, repr(e)))
+                print(f"[FAIL] {arch} {shape_name} multi={multi}: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nAll dry-run cells compiled successfully.")
+
+
+if __name__ == "__main__":
+    main()

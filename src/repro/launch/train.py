@@ -1,0 +1,73 @@
+"""Training launcher: ``--arch <id>`` selects any assigned architecture.
+
+Full-size configs target the production meshes (use dryrun.py to validate
+those); ``--scale tiny|100m`` shrinks the selected family to laptop scale
+for a real end-to-end run on CPU, with fault-tolerant checkpointing and the
+MCFlash bitmap-filtered data pipeline.
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m \
+        --scale tiny --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.optim import AdamWConfig
+from repro.train.loop import LoopConfig, TrainLoop
+
+
+def scale_config(cfg, scale: str):
+    if scale == "full":
+        return cfg
+    dims = dict(tiny=dict(d_model=128, d_ff=512, vocab=2048, repeats=2),
+                **{"100m": dict(d_model=768, d_ff=2048, vocab=16384,
+                                repeats=min(cfg.repeats, 8))})[scale]
+    kw = dict(dims)
+    if cfg.n_heads:
+        kw.update(n_heads=4, n_kv_heads=min(cfg.n_kv_heads, 2) or 1, head_dim=32)
+    if cfg.rnn_width:
+        kw.update(rnn_width=dims["d_model"])
+    if cfg.n_experts:
+        kw.update(n_experts=4, top_k=2)
+    if cfg.encdec:
+        kw.update(enc_layers=2, dec_seq=64)
+    pattern = tuple(dataclasses.replace(b, window=64 if b.window else 0)
+                    for b in cfg.pattern)
+    return dataclasses.replace(cfg, pattern=pattern, tail=(), **kw)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCH_NAMES))
+    ap.add_argument("--scale", choices=("tiny", "100m", "full"), default="tiny")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = scale_config(get_config(args.arch), args.scale)
+    if args.scale == "full":
+        raise SystemExit("full-size training needs the production mesh; "
+                         "use repro.launch.dryrun to validate it here")
+    loop = TrainLoop(
+        cfg,
+        LoopConfig(total_steps=args.steps, ckpt_every=max(args.steps // 2, 1),
+                   ckpt_dir=args.ckpt_dir, log_every=10,
+                   microbatches=args.microbatches),
+        opt_cfg=AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                            total_steps=args.steps),
+        global_batch=args.batch, seq_len=args.seq)
+    loop.install_preemption_handler()
+    result = loop.run()
+    losses = [m["loss"] for m in result["metrics"]]
+    print(f"done: steps={result['last_step']} "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Model zoo: config-driven LM assembly for all assigned architectures."""
+from repro.models import attention, layers, lm, moe, rglru, specs, ssd
+from repro.models.lm import (abstract_cache, build_specs, cache_layout,
+                             decode_step, forward_loss, init_cache, prefill)
+from repro.models.specs import (ParamSpec, abstract_tree, count_params,
+                                init_tree, partition_specs_tree,
+                                shardings_tree)
+
+__all__ = ["attention", "layers", "lm", "moe", "rglru", "specs", "ssd",
+           "build_specs", "forward_loss", "prefill", "decode_step",
+           "init_cache", "abstract_cache", "cache_layout", "ParamSpec",
+           "init_tree", "abstract_tree", "shardings_tree",
+           "partition_specs_tree", "count_params"]

@@ -1,0 +1,169 @@
+"""Attention: GQA flash-style blockwise, chunked sliding-window, and decode.
+
+All full-length paths avoid materialising (Sq, Skv) logits:
+- ``flash_attention``: online-softmax scan over KV blocks (the TPU-friendly
+  formulation of FlashAttention — block sizes sized for VMEM-era tiling).
+- ``local_attention``: banded two-chunk formulation, exact for
+  window <= chunk, so sliding-window layers cost O(S * 2W) not O(S^2).
+- ``decode_attention``: single-token query against a (possibly
+  sequence-sharded) KV cache; the softmax reduce partitions over the
+  sharded KV axis (flash-decoding style) under pjit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def _group(q: jax.Array, n_kv: int) -> jax.Array:
+    """(B, Hq, S, D) -> (B, Hkv, G, S, D)."""
+    b, hq, s, d = q.shape
+    return q.reshape(b, n_kv, hq // n_kv, s, d)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block: int = 512,
+                    q_offset: int = 0) -> jax.Array:
+    """Blockwise attention.  q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D).
+
+    ``q_offset`` positions the queries within the kv sequence (prefill
+    continuation); causal masking compares absolute positions.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    block = min(block, skv)
+    assert skv % block == 0, (skv, block)
+    nb = skv // block
+    qg = _group(q, hkv) * (d ** -0.5)                        # (B, Hkv, G, Sq, D)
+    q_pos = q_offset + jnp.arange(sq)
+
+    kb = k.reshape(b, hkv, nb, block, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, hkv, nb, block, d).transpose(2, 0, 1, 3, 4)
+
+    def body(carry, args):
+        o, m, l = carry                                      # running stats
+        kb_i, vb_i, start = args
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kb_i,
+                       preferred_element_type=jnp.float32)
+        if causal:
+            kv_pos = start + jnp.arange(block)
+            mask = q_pos[:, None] >= kv_pos[None, :]         # (Sq, block)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(vb_i.dtype), vb_i,
+                        preferred_element_type=jnp.float32)
+        o_new = o * alpha[..., None] + pv
+        return (o_new, m_new, l_new), None
+
+    o0 = jnp.zeros((b, hkv, hq // hkv, sq, d), jnp.float32)
+    m0 = jnp.full((b, hkv, hq // hkv, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, hq // hkv, sq), jnp.float32)
+    starts = jnp.arange(nb) * block
+    (o, m, l), _ = jax.lax.scan(body, (o0, m0, l0), (kb, vb, starts))
+    out = o / jnp.maximum(l[..., None], 1e-37)
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def local_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    window: int) -> jax.Array:
+    """Sliding-window causal attention, exact, O(S * 2W).
+
+    Small windows use the banded two-chunk formulation; windows >= 2048 use
+    a q-chunk scan (bounded working set) — the banded reshape at large W
+    materialises (S, 2W) logits, which at 32k prefill is tens of GiB.
+    """
+    if window >= 2048 and q.shape[2] > window:
+        return _local_attention_scanned(q, k, v, window=window)
+    b, hq, s, d = q.shape
+    _, hkv, _, _ = k.shape
+    w = min(window, s)
+    assert s % w == 0, (s, w)
+    n = s // w
+    qg = _group(q, hkv).reshape(b, hkv, hq // hkv, n, w, d) * (d ** -0.5)
+
+    def chunk2(x):                                           # prev ++ cur chunks
+        xc = x.reshape(b, hkv, n, w, d)
+        prev = jnp.pad(xc[:, :, :-1], ((0, 0), (0, 0), (1, 0), (0, 0), (0, 0)))
+        return jnp.concatenate([prev, xc], axis=3)           # (B, Hkv, n, 2w, D)
+
+    k2, v2 = chunk2(k), chunk2(v)
+    s_ = jnp.einsum("bhgnqd,bhnkd->bhgnqk", qg, k2,
+                    preferred_element_type=jnp.float32)
+    qpos = jnp.arange(w)[:, None] + w                        # within 2w frame
+    kpos = jnp.arange(2 * w)[None, :]
+    band = (qpos >= kpos) & (qpos - kpos < w)                # causal ∧ in-window
+    first = jnp.arange(n) == 0                               # no prev chunk
+    valid = band[None, :, :] & ~(first[:, None, None] & (kpos < w))
+    s_ = jnp.where(valid[None, None, None], s_, NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1)
+    out = jnp.einsum("bhgnqk,bhnkd->bhgnqd", p.astype(v2.dtype), v2)
+    return out.reshape(b, hq, s, d).astype(q.dtype)
+
+
+def _local_attention_scanned(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                             window: int, q_chunk: int = 512) -> jax.Array:
+    """Sliding-window attention as a scan over query chunks.
+
+    Each q chunk of C tokens attends a fixed (W + C)-token KV span ending at
+    its last token; one softmax per chunk (the window is fully in view, no
+    online-softmax needed).  Working set per step: (B, Hkv, G, C, W+C).
+    """
+    b, hq, s, d = q.shape
+    _, hkv, _, _ = k.shape
+    c = min(q_chunk, s)
+    assert s % c == 0, (s, c)
+    n = s // c
+    qg = _group(q, hkv) * (d ** -0.5)                         # (B,Hkv,G,S,D)
+    span = window + c
+    kp = jnp.pad(k, ((0, 0), (0, 0), (window, 0), (0, 0)))    # front halo
+    vp = jnp.pad(v, ((0, 0), (0, 0), (window, 0), (0, 0)))
+
+    def chunk(_, i):
+        q_i = jax.lax.dynamic_slice_in_dim(qg, i * c, c, axis=3)
+        k_i = jax.lax.dynamic_slice_in_dim(kp, i * c, span, axis=2)
+        v_i = jax.lax.dynamic_slice_in_dim(vp, i * c, span, axis=2)
+        s_ = jnp.einsum("bhgqd,bhkd->bhgqk", q_i, k_i,
+                        preferred_element_type=jnp.float32)
+        qpos = i * c + jnp.arange(c)[:, None]                 # absolute
+        kpos = i * c + jnp.arange(span)[None, :] - window
+        valid = (qpos >= kpos) & (qpos - kpos < window) & (kpos >= 0)
+        s_ = jnp.where(valid[None, None, None], s_, NEG_INF)
+        p = jax.nn.softmax(s_, axis=-1)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v_i.dtype), v_i)
+        return None, o
+
+    _, chunks = jax.lax.scan(chunk, None, jnp.arange(n))      # (n,B,Hkv,G,C,D)
+    out = jnp.moveaxis(chunks, 0, 3).reshape(b, hkv, hq // hkv, s, d)
+    return out.reshape(b, hq, s, d).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
+                     cur_index: jax.Array,
+                     entry_positions: jax.Array | None = None) -> jax.Array:
+    """One-token attention.  q: (B, Hq, 1, D); caches: (B, Hkv, S, D).
+
+    ``entry_positions`` gives each cache slot's absolute token position
+    (ring buffers); defaults to slot == position.  Slots with position >
+    cur_index (unwritten / future) are masked.
+    """
+    b, hq, _, d = q.shape
+    _, hkv, s, _ = k_cache.shape
+    qg = _group(q, hkv)[:, :, :, 0] * (d ** -0.5)            # (B, Hkv, G, D)
+    # NB: no preferred_element_type=f32 here — on the CPU backend that
+    # lowers as a full f32 CONVERT of the (huge) KV cache before the dot
+    # (~30x the true decode HBM traffic); TPU MXU accumulates f32 natively
+    # for bf16 inputs, so casting the (tiny) scores afterwards is exact
+    # enough and keeps cache reads at bf16.
+    scores = jnp.einsum("bhgd,bhsd->bhgs", qg,
+                        k_cache).astype(jnp.float32)
+    pos = entry_positions if entry_positions is not None else jnp.arange(s)
+    valid = pos <= cur_index
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, hq, 1, d).astype(q.dtype)

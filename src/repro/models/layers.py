@@ -1,0 +1,121 @@
+"""Shared model layers: norms, rotary embeddings, MLPs, embedding/loss."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.specs import ParamSpec
+from repro.parallel.sharding import constrain
+
+
+@jax.custom_vjp
+def grad_bf16(x: jax.Array) -> jax.Array:
+    """Identity whose COTANGENT is cast to bf16.
+
+    Flash-attention and the CE head run f32 interiors; without this guard
+    their f32 cotangents flow into the weight-gradient einsums, making every
+    per-microbatch gradient partial-reduction move f32 (2x ICI traffic).
+    Applied where activations exit a bf16 region into an f32 interior."""
+    return x
+
+
+def _grad_bf16_fwd(x):
+    return x, None
+
+
+def _grad_bf16_bwd(_, g):
+    return (g.astype(jnp.bfloat16),)
+
+
+grad_bf16.defvjp(_grad_bf16_fwd, _grad_bf16_bwd)
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w)).astype(dt)  # gemma-style (1+w) zero-centred gain
+
+
+def rotary(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply RoPE.  x: (..., S, D) with D even; positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    # broadcast over head dims: x is (B, H, S, D); ang is (S, half) or (B,S,half)
+    while cos.ndim < x.ndim:
+        cos, sin = cos[None], sin[None]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------- dense (SwiGLU) MLP -----------------------------
+
+def mlp_specs(d_model: int, d_ff: int) -> dict:
+    return {
+        "w_gate": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "w_up": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "w_down": ParamSpec((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = constrain(h, ("batch", None, "act_heads"))
+    return h @ p["w_down"]
+
+
+# ----------------------------- embedding / logits -----------------------------
+
+def embed_specs(vocab: int, d_model: int) -> ParamSpec:
+    return ParamSpec((vocab, d_model), ("vocab", "embed"), init="scaled", scale=0.02)
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def chunked_softmax_xent(x: jax.Array, table: jax.Array, labels: jax.Array,
+                         mask: jax.Array, chunk: int = 512) -> jax.Array:
+    """Cross-entropy over (B, S, D) activations with tied-vocab head, computed
+    in sequence chunks so the (B, chunk, V) logits never materialise at full
+    length — the difference between fitting and not fitting at V=256k.
+    """
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    n = s // chunk
+    assert s % chunk == 0, (s, chunk)
+
+    def body(carry, args):
+        xc, yc, mc = args                                  # (B, chunk, ...)
+        logits = (xc @ table.T).astype(jnp.float32)        # (B, chunk, V)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        loss = (logz - gold) * mc
+        return carry + loss.sum(), None
+
+    xs = (x.reshape(b, n, chunk, d).swapaxes(0, 1),
+          labels.reshape(b, n, chunk).swapaxes(0, 1),
+          mask.reshape(b, n, chunk).swapaxes(0, 1))
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), xs)
+    return total / jnp.maximum(mask.sum(), 1)
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
+                  state: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv.  x: (B, S, C), w: (W, C).  Returns (y, new_state)
+    where state carries the trailing W-1 inputs for streaming decode."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                  # (B, S+W-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(width))
+    if b is not None:
+        y = y + b
+    new_state = xp[:, -(width - 1):, :] if width > 1 else pad
+    return y, new_state

@@ -1,0 +1,541 @@
+"""Config-driven model assembly: decoder-only LMs (dense / MoE / SSM /
+hybrid / VLM-backbone) and the whisper-style encoder-decoder.
+
+The layer stack is ``pattern x repeats (+ tail)``: pattern-block parameters
+are stacked along a leading "layers" axis and executed with ``lax.scan`` so
+the HLO stays compact for 64-layer models, while heterogeneous stacks
+(gemma3's 5 local : 1 global, recurrentgemma's 2 RG-LRU : 1 local-attn)
+scan over whole pattern units.  Caches mirror the same structure.
+
+Entry points:
+  build_specs(cfg)                      -> ParamSpec pytree
+  forward(params, cfg, batch, mode)     -> logits or (loss, metrics)
+  init_cache_specs(cfg, batch, seq)     -> cache ParamSpec-like (shape/dtype)
+  decode_step(params, cfg, tokens, cache, cur_index) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockCfg, ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssd as ssd_lib
+from repro.models.layers import (chunked_softmax_xent, embed_lookup,
+                                 embed_specs, grad_bf16, mlp_apply, mlp_specs,
+                                 rms_norm, rotary)
+from repro.models.specs import ParamSpec, stacked
+from repro.parallel.sharding import constrain
+
+# --------------------------------------------------------------------------
+# Parameter specs
+# --------------------------------------------------------------------------
+
+def _attn_specs(cfg: ModelConfig) -> dict:
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", None)),
+        "wk": ParamSpec((d, k, hd), ("embed", "kv_heads", None)),
+        "wv": ParamSpec((d, k, hd), ("embed", "kv_heads", None)),
+        "wo": ParamSpec((h, hd, d), ("heads", None, "embed")),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = ParamSpec((hd,), (None,), init="zeros")
+        s["k_norm"] = ParamSpec((hd,), (None,), init="zeros")
+    return s
+
+
+def _block_specs(cfg: ModelConfig, blk: BlockCfg) -> dict:
+    s: dict[str, Any] = {"ln1": ParamSpec((cfg.d_model,), (None,), init="zeros")}
+    if blk.kind in ("attn", "swa"):
+        s["attn"] = _attn_specs(cfg)
+    elif blk.kind == "rglru":
+        s["rglru"] = rglru_lib.rglru_specs(cfg)
+    elif blk.kind == "ssd":
+        s["ssd"] = ssd_lib.ssd_specs(cfg)
+    else:
+        raise ValueError(blk.kind)
+    if blk.mlp == "dense":
+        s["ln2"] = ParamSpec((cfg.d_model,), (None,), init="zeros")
+        s["mlp"] = mlp_specs(cfg.d_model, cfg.d_ff)
+    elif blk.mlp == "moe":
+        s["ln2"] = ParamSpec((cfg.d_model,), (None,), init="zeros")
+        s["moe"] = moe_lib.moe_specs(cfg.d_model, cfg.d_ff, cfg.n_experts)
+    return s
+
+
+def build_specs(cfg: ModelConfig) -> dict:
+    """Full parameter-spec tree for an arch."""
+    if cfg.encdec:
+        return _encdec_specs(cfg)
+    specs: dict[str, Any] = {
+        "embed": embed_specs(cfg.vocab, cfg.d_model),
+        "final_norm": ParamSpec((cfg.d_model,), (None,), init="zeros"),
+    }
+    pattern = {}
+    for i, blk in enumerate(cfg.pattern):
+        blk_specs = _block_specs(cfg, blk)
+        pattern[f"b{i}"] = jax.tree.map(
+            lambda sp: stacked(sp, cfg.repeats), blk_specs,
+            is_leaf=lambda x: isinstance(x, ParamSpec))
+    specs["pattern"] = pattern
+    specs["tail"] = {f"t{i}": _block_specs(cfg, blk)
+                     for i, blk in enumerate(cfg.tail)}
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab), ("embed", "vocab"))
+    return specs
+
+
+# --------------------------------------------------------------------------
+# Block application (full-sequence and decode)
+# --------------------------------------------------------------------------
+
+def _attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, blk: BlockCfg, *,
+                positions: jax.Array, cache: dict | None,
+                cur_index: jax.Array | None, causal: bool = True):
+    """Returns (out, new_cache_entry)."""
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = grad_bf16(rotary(q, positions, cfg.rope_theta))
+    k = grad_bf16(rotary(k, positions, cfg.rope_theta))
+    v = grad_bf16(v)
+    if s == 1:
+        # decode: q is one token; shard the head dim (flash-decoding splits
+        # the cache seq axis via the cache's own sharding).
+        q = constrain(q, ("batch", "act_heads", None, None))
+    # full-sequence paths inherit the carry's seq sharding (Megatron-SP):
+    # queries stay seq-sharded, KV gathers once per layer — no per-block
+    # relayout inside the flash scan.
+
+    new_cache = None
+    if cache is None:
+        if blk.kind == "swa" and causal:
+            o = attn.local_attention(q, k, v, window=blk.window)
+        else:
+            o = attn.flash_attention(q, k, v, causal=causal)
+    elif s > 1:
+        # prefill into cache
+        kc, vc = _cache_write_prefill(cache, k, v, blk)
+        new_cache = {"k": kc, "v": vc}
+        if blk.kind == "swa" and causal:
+            o = attn.local_attention(q, k, v, window=blk.window)
+        else:
+            o = attn.flash_attention(q, k, v, causal=causal)
+    else:
+        # single-token decode
+        kc, vc, entry_pos = _cache_write_decode(cache, k, v, blk, cur_index)
+        new_cache = {"k": kc, "v": vc}
+        o = attn.decode_attention(q, kc, vc, cur_index=cur_index,
+                                  entry_positions=entry_pos)
+    out = jnp.einsum("bhsk,hkd->bsd", o, p["wo"])
+    return out, new_cache
+
+
+def _cache_write_prefill(cache, k, v, blk: BlockCfg):
+    kc, vc = cache["k"], cache["v"]
+    if blk.kind == "swa" and blk.window < k.shape[2]:
+        k, v = k[:, :, -blk.window:], v[:, :, -blk.window:]
+    kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, 0, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, 0, 0, 0))
+    return kc, vc
+
+
+def _cache_write_decode(cache, k, v, blk: BlockCfg, cur_index):
+    kc, vc = cache["k"], cache["v"]
+    window = kc.shape[2]
+    if blk.kind == "swa":
+        slot = jnp.mod(cur_index, window)
+        # ring-buffer slot positions: p_j = cur - ((cur - j) mod window)
+        j = jnp.arange(window)
+        entry_pos = cur_index - jnp.mod(cur_index - j, window)
+    else:
+        slot = cur_index
+        entry_pos = None
+    # Masked (one-hot) write, NOT dynamic_update_slice: a DUS into the
+    # sequence-SHARDED cache dim makes SPMD "involuntarily rematerialize"
+    # the whole cache (gather -> update -> reshard) every layer; the masked
+    # select is elementwise and stays sharded (~30x less decode HBM traffic).
+    hit = (jnp.arange(window) == slot)[None, None, :, None]
+    kc = jnp.where(hit, k.astype(kc.dtype), kc)
+    vc = jnp.where(hit, v.astype(vc.dtype), vc)
+    return kc, vc, entry_pos
+
+
+def _apply_block(p: dict, x: jax.Array, cfg: ModelConfig, blk: BlockCfg, *,
+                 positions, cache, cur_index, causal=True):
+    """Pre-norm residual block.  Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    new_cache = None
+    if blk.kind in ("attn", "swa"):
+        o, new_cache = _attn_apply(p["attn"], h, cfg, blk, positions=positions,
+                                   cache=cache, cur_index=cur_index,
+                                   causal=causal)
+    elif blk.kind == "rglru":
+        if cache is None:
+            o, new_cache = rglru_lib.rglru_forward(p["rglru"], h, cfg)
+            new_cache = None
+        elif h.shape[1] > 1:
+            o, new_cache = rglru_lib.rglru_forward(p["rglru"], h, cfg)
+        else:
+            o, new_cache = rglru_lib.rglru_decode(p["rglru"], h, cfg, cache)
+    elif blk.kind == "ssd":
+        if cache is None:
+            o, _ = ssd_lib.ssd_forward(p["ssd"], h, cfg)
+        elif h.shape[1] > 1:
+            o, new_cache = ssd_lib.ssd_forward(p["ssd"], h, cfg)
+        else:
+            o, new_cache = ssd_lib.ssd_decode(p["ssd"], h, cfg, cache)
+    else:
+        raise ValueError(blk.kind)
+    x = x + o
+    if blk.mlp == "dense":
+        x = x + mlp_apply(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    elif blk.mlp == "moe":
+        mo, aux = moe_lib.moe_apply(p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps),
+                                    top_k=cfg.top_k,
+                                    capacity_factor=cfg.capacity_factor)
+        x = x + mo
+    return x, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def _run_stack(params: dict, x: jax.Array, cfg: ModelConfig, *,
+               positions, caches=None, cur_index=None, causal=True,
+               remat: bool = False):
+    """Scan the pattern stack, then the tail.  caches: matching structure or
+    None.  Returns (x, new_caches, total_aux)."""
+    total_aux = jnp.zeros((), jnp.float32)
+
+    def unit(x, unit_params, unit_caches):
+        # Megatron-style sequence parallelism: the inter-layer residual
+        # carries (which the remat policy must save) shard their seq dim
+        # over "model", cutting saved-activation memory TP-ways.  The
+        # grad_bf16 guard keeps the backward reshard of this boundary in
+        # bf16 (the f32 rms_norm interior otherwise pulls the collective
+        # to the f32 side of the cast: 2x ICI bytes).
+        x = grad_bf16(constrain(x, ("batch", "seq", "act_embed")))
+        aux_sum = jnp.zeros((), jnp.float32)
+        new_caches = {}
+        for i, blk in enumerate(cfg.pattern):
+            c = None if unit_caches is None else unit_caches[f"b{i}"]
+            x, nc, aux = _apply_block(unit_params[f"b{i}"], x, cfg, blk,
+                                      positions=positions, cache=c,
+                                      cur_index=cur_index, causal=causal)
+            new_caches[f"b{i}"] = nc
+            aux_sum = aux_sum + aux
+        return x, new_caches, aux_sum
+
+    unit_fn = jax.checkpoint(unit, policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat else unit
+
+    new_pattern_caches = None
+    if cfg.repeats > 0:
+        if caches is None:
+            def body(carry, unit_params):
+                x, aux_acc = carry
+                x, _, aux = unit_fn(x, unit_params, None)
+                return (x, aux_acc + aux), None
+
+            (x, total_aux), _ = jax.lax.scan(body, (x, total_aux),
+                                             params["pattern"])
+        else:
+            def body(carry, scanned):
+                x, aux_acc = carry
+                unit_params, unit_caches = scanned
+                x, ncaches, aux = unit_fn(x, unit_params, unit_caches)
+                return (x, aux_acc + aux), ncaches
+
+            (x, total_aux), new_pattern_caches = jax.lax.scan(
+                body, (x, total_aux), (params["pattern"], caches["pattern"]))
+
+    new_tail_caches = {}
+    for i, blk in enumerate(cfg.tail):
+        c = None if caches is None else caches["tail"][f"t{i}"]
+        x, nc, aux = _apply_block(params["tail"][f"t{i}"], x, cfg, blk,
+                                  positions=positions, cache=c,
+                                  cur_index=cur_index, causal=causal)
+        new_tail_caches[f"t{i}"] = nc
+        total_aux = total_aux + aux
+
+    new_caches = None
+    if caches is not None:
+        new_caches = {"pattern": new_pattern_caches, "tail": new_tail_caches}
+    return x, new_caches, total_aux
+
+
+# --------------------------------------------------------------------------
+# Public entry points
+# --------------------------------------------------------------------------
+
+def cast_params(params, dtype=jnp.bfloat16):
+    """Mixed precision: f32 master weights -> bf16 compute copies."""
+    return jax.tree.map(
+        lambda p: p.astype(dtype) if p.dtype == jnp.float32 else p, params)
+
+
+def forward_loss(params: dict, cfg: ModelConfig, batch: dict, *,
+                 remat: bool = True) -> tuple[jax.Array, dict]:
+    """Training loss.  batch: {tokens|embeds, labels, (enc_* for encdec)}."""
+    params = cast_params(params)
+    if cfg.encdec:
+        return _encdec_loss(params, cfg, batch, remat=remat)
+    if cfg.uses_tokens:
+        tokens = batch["tokens"]
+        x = embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+        labels = batch.get("labels")
+        if labels is None:
+            labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+    else:
+        x = batch["embeds"].astype(jnp.bfloat16)
+        labels = batch["labels"]
+    x = constrain(x, ("batch", "seq", "act_embed"))
+    x = x * (cfg.d_model ** 0.5) if cfg.family in ("hybrid",) else x
+    positions = jnp.arange(x.shape[1])
+    x, _, aux = _run_stack(params, x, cfg, positions=positions, remat=remat)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    mask = (labels > 0).astype(jnp.float32)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"].T
+    loss = chunked_softmax_xent(grad_bf16(x), table, labels, mask)
+    total = loss + 0.01 * aux
+    return total, {"xent": loss, "aux": aux}
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: dict, caches: dict):
+    """Prefill: run the full sequence, fill caches, return last-token logits."""
+    assert not cfg.encdec, "use encdec_prefill for encoder-decoder archs"
+    params = cast_params(params)
+    if cfg.uses_tokens:
+        x = embed_lookup(params["embed"], batch["tokens"]).astype(jnp.bfloat16)
+    else:
+        x = batch["embeds"].astype(jnp.bfloat16)
+    x = constrain(x, ("batch", "seq", "act_embed"))
+    positions = jnp.arange(x.shape[1])
+    x, new_caches, _ = _run_stack(params, x, cfg, positions=positions,
+                                  caches=caches, remat=False)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"].T
+    logits = x[:, -1:] @ table.T
+    return logits, new_caches
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                caches: dict, cur_index: jax.Array):
+    """One serving step: tokens (B, 1) int32 (or embeds (B,1,D)) -> logits."""
+    params = cast_params(params)
+    if cfg.encdec:
+        return _encdec_decode_step(params, cfg, tokens, caches, cur_index)
+    if tokens.ndim == 2:
+        # token ids — VLM/audio archs also decode *text* tokens; the modality
+        # frontend only contributes at prefill time.
+        x = embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+    else:
+        x = tokens.astype(jnp.bfloat16)
+    positions = jnp.full((1,), 0) + cur_index
+    x, new_caches, _ = _run_stack(params, x, cfg, positions=positions,
+                                  caches=caches, cur_index=cur_index,
+                                  remat=False)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"].T
+    logits = x @ table.T
+    return logits, new_caches
+
+
+# --------------------------------------------------------------------------
+# Caches
+# --------------------------------------------------------------------------
+
+def _block_cache_shape(cfg: ModelConfig, blk: BlockCfg, batch: int, seq: int,
+                       dtype=jnp.bfloat16):
+    if blk.kind in ("attn", "swa"):
+        length = min(blk.window, seq) if blk.kind == "swa" else seq
+        shape = (batch, cfg.n_kv_heads, length, cfg.head_dim)
+        axes = ("batch", "kv_heads", "kv_seq" if blk.kind == "attn" else None, None)
+        return {"k": (shape, dtype, axes), "v": (shape, dtype, axes)}
+    if blk.kind == "rglru":
+        return {
+            "h": ((batch, cfg.rnn_width), jnp.float32, ("batch", "mlp")),
+            "conv": ((batch, cfg.conv_width - 1, cfg.rnn_width), jnp.float32,
+                     ("batch", None, "mlp")),
+        }
+    if blk.kind == "ssd":
+        d = ssd_lib.ssd_dims(cfg)
+        return {
+            "ssm": ((batch, d["n_heads"], d["p"], d["n"]), jnp.float32,
+                    ("batch", None, None, None)),
+            "conv": ((batch, cfg.conv_width - 1, d["conv_dim"]), jnp.float32,
+                     ("batch", None, None)),
+        }
+    raise ValueError(blk.kind)
+
+
+def cache_layout(cfg: ModelConfig, batch: int, seq: int):
+    """(shape, dtype, logical_axes) tree matching the cache structure."""
+    if cfg.encdec:
+        return _encdec_cache_layout(cfg, batch, seq)
+    pattern = {}
+    for i, blk in enumerate(cfg.pattern):
+        entry = _block_cache_shape(cfg, blk, batch, seq)
+        entry = jax.tree.map(
+            lambda t: ((cfg.repeats,) + t[0], t[1], ("layers",) + t[2]),
+            entry, is_leaf=lambda t: isinstance(t, tuple) and len(t) == 3
+            and isinstance(t[0], tuple))
+        pattern[f"b{i}"] = entry
+    tail = {f"t{i}": _block_cache_shape(cfg, blk, batch, seq)
+            for i, blk in enumerate(cfg.tail)}
+    return {"pattern": pattern, "tail": tail}
+
+
+def _is_layout_leaf(t) -> bool:
+    return (isinstance(t, tuple) and len(t) == 3 and isinstance(t[0], tuple))
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int):
+    layout = cache_layout(cfg, batch, seq)
+    return jax.tree.map(lambda t: jnp.zeros(t[0], t[1]), layout,
+                        is_leaf=_is_layout_leaf)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq: int):
+    layout = cache_layout(cfg, batch, seq)
+    return jax.tree.map(lambda t: jax.ShapeDtypeStruct(t[0], t[1]), layout,
+                        is_leaf=_is_layout_leaf)
+
+
+# --------------------------------------------------------------------------
+# Encoder-decoder (whisper-tiny)
+# --------------------------------------------------------------------------
+
+def _encdec_specs(cfg: ModelConfig) -> dict:
+    enc_blk = BlockCfg("attn", "dense")
+    dec_blk = BlockCfg("attn", "dense")
+    specs: dict[str, Any] = {
+        "embed": embed_specs(cfg.vocab, cfg.d_model),
+        "enc_pos": ParamSpec((1, 8192, cfg.d_model), (None, None, "embed"),
+                             init="scaled", scale=0.02),
+        "final_norm": ParamSpec((cfg.d_model,), (None,), init="zeros"),
+        "enc_final_norm": ParamSpec((cfg.d_model,), (None,), init="zeros"),
+    }
+    enc = {f"e{i}": _block_specs(cfg, enc_blk) for i in range(cfg.enc_layers)}
+    dec = {}
+    for i in range(cfg.repeats):
+        d = _block_specs(cfg, dec_blk)
+        d["cross"] = _attn_specs(cfg)
+        d["ln_cross"] = ParamSpec((cfg.d_model,), (None,), init="zeros")
+        dec[f"d{i}"] = d
+    specs["encoder"] = enc
+    specs["decoder"] = dec
+    return specs
+
+
+def _encdec_encode(params, cfg, frames, remat: bool = False):
+    """frames: (B, S_enc, D) precomputed conv-frontend embeddings (stub)."""
+    x = frames.astype(jnp.bfloat16)
+    x = constrain(x, ("batch", "seq", "act_embed"))
+    pos = jnp.arange(x.shape[1])
+    enc_blk = BlockCfg("attn", "dense")
+
+    def block(p, x):
+        y, _, _ = _apply_block(p, x, cfg, enc_blk, positions=pos,
+                               cache=None, cur_index=None, causal=False)
+        return y
+
+    blk_fn = jax.checkpoint(block) if remat else block
+    for i in range(cfg.enc_layers):
+        x = blk_fn(params["encoder"][f"e{i}"], x)
+    return rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _encdec_loss(params, cfg, batch, remat=True):
+    enc_out = _encdec_encode(params, cfg, batch["frames"], remat=remat)
+    tokens = batch["tokens"]
+    x = embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+    pos = jnp.arange(x.shape[1])
+    dec_blk = BlockCfg("attn", "dense")
+
+    def dec_block(p, x, enc_out):
+        x, _, _ = _apply_block(p, x, cfg, dec_blk, positions=pos,
+                               cache=None, cur_index=None)
+        # cross attention
+        h = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bhsk", h, p["cross"]["wq"])
+        ek = jnp.einsum("bsd,dhk->bhsk", enc_out, p["cross"]["wk"])
+        ev = jnp.einsum("bsd,dhk->bhsk", enc_out, p["cross"]["wv"])
+        o = attn.flash_attention(q, ek, ev, causal=False)
+        return x + jnp.einsum("bhsk,hkd->bsd", o, p["cross"]["wo"])
+
+    dec_fn = jax.checkpoint(dec_block) if remat else dec_block
+    for i in range(cfg.repeats):
+        x = dec_fn(params["decoder"][f"d{i}"], x, enc_out)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+    mask = (labels > 0).astype(jnp.float32)
+    loss = chunked_softmax_xent(x, params["embed"], labels, mask,
+                                chunk=min(448, x.shape[1]))
+    return loss, {"xent": loss, "aux": jnp.zeros((), jnp.float32)}
+
+
+def _encdec_cache_layout(cfg: ModelConfig, batch: int, seq: int):
+    """Decoder caches: self-attn over dec_seq + cross K/V over `seq` frames."""
+    self_shape = (batch, cfg.n_kv_heads, cfg.dec_seq, cfg.head_dim)
+    cross_shape = (batch, cfg.n_kv_heads, seq, cfg.head_dim)
+    axes_self = ("batch", "kv_heads", None, None)
+    axes_cross = ("batch", "kv_heads", "kv_seq", None)
+    return {
+        f"d{i}": {
+            "k": (self_shape, jnp.bfloat16, axes_self),
+            "v": (self_shape, jnp.bfloat16, axes_self),
+            "ck": (cross_shape, jnp.bfloat16, axes_cross),
+            "cv": (cross_shape, jnp.bfloat16, axes_cross),
+        } for i in range(cfg.repeats)
+    }
+
+
+def encdec_prefill(params, cfg, batch, caches):
+    """Encode frames and stage cross-attention K/V into the decode caches."""
+    params = cast_params(params)
+    enc_out = _encdec_encode(params, cfg, batch["frames"])
+    new_caches = dict(caches)
+    for i in range(cfg.repeats):
+        p = params["decoder"][f"d{i}"]
+        ck = jnp.einsum("bsd,dhk->bhsk", enc_out, p["cross"]["wk"])
+        cv = jnp.einsum("bsd,dhk->bhsk", enc_out, p["cross"]["wv"])
+        c = dict(caches[f"d{i}"])
+        c["ck"], c["cv"] = ck.astype(jnp.bfloat16), cv.astype(jnp.bfloat16)
+        new_caches[f"d{i}"] = c
+    return new_caches
+
+
+def _encdec_decode_step(params, cfg, tokens, caches, cur_index):
+    x = embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+    pos = jnp.full((1,), 0) + cur_index
+    dec_blk = BlockCfg("attn", "dense")
+    new_caches = {}
+    for i in range(cfg.repeats):
+        p = params["decoder"][f"d{i}"]
+        c = caches[f"d{i}"]
+        x, nc, _ = _apply_block(p, x, cfg, dec_blk, positions=pos,
+                                cache={"k": c["k"], "v": c["v"]},
+                                cur_index=cur_index)
+        h = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bhsk", h, p["cross"]["wq"])
+        o = attn.decode_attention(q, c["ck"], c["cv"],
+                                  cur_index=jnp.asarray(c["ck"].shape[2] - 1))
+        x = x + jnp.einsum("bhsk,hkd->bsd", o, p["cross"]["wo"])
+        new_caches[f"d{i}"] = {"k": nc["k"], "v": nc["v"],
+                               "ck": c["ck"], "cv": c["cv"]}
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["embed"].T
+    return logits, new_caches

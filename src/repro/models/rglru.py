@@ -1,0 +1,97 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin — arXiv:2402.19427).
+
+The recurrence  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)  with
+a_t = exp(-c * softplus(Lambda) * sigmoid(r_t))  is a first-order linear
+scan, so training/prefill uses ``lax.associative_scan`` (parallel prefix,
+O(S log S) depth) and decode is an O(1) state update.  The input/recurrence
+gates use the paper's block-diagonal linear structure (16 blocks).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import causal_conv1d
+from repro.models.specs import ParamSpec
+
+N_BLOCKS = 16
+C_SCALE = 8.0
+
+
+def rglru_specs(cfg) -> dict:
+    d, r = cfg.d_model, cfg.rnn_width
+    blk = r // N_BLOCKS
+    return {
+        "w_y": ParamSpec((d, r), ("embed", "mlp")),       # gate branch
+        "w_x": ParamSpec((d, r), ("embed", "mlp")),       # recurrent branch
+        "conv_w": ParamSpec((cfg.conv_width, r), ("conv", None),
+                            init="scaled", scale=0.1),
+        "conv_b": ParamSpec((r,), (None,), init="zeros"),
+        "gate_i_w": ParamSpec((N_BLOCKS, blk, blk), (None, None, None)),
+        "gate_i_b": ParamSpec((r,), (None,), init="zeros"),
+        "gate_a_w": ParamSpec((N_BLOCKS, blk, blk), (None, None, None)),
+        "gate_a_b": ParamSpec((r,), (None,), init="zeros"),
+        "lam": ParamSpec((r,), (None,), init="scaled", scale=0.5),
+        "w_out": ParamSpec((r, cfg.d_model), ("mlp", "embed")),
+    }
+
+
+def _block_linear(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Block-diagonal linear: x (..., R) with R = N_BLOCKS * blk."""
+    shape = x.shape
+    xb = x.reshape(*shape[:-1], N_BLOCKS, shape[-1] // N_BLOCKS)
+    yb = jnp.einsum("...nb,nbc->...nc", xb, w)
+    return yb.reshape(*shape) + b
+
+
+def _gates(p: dict, x: jax.Array):
+    """x: (..., R) -> (a, gated_input) both (..., R), fp32."""
+    xf = x.astype(jnp.float32)
+    i_t = jax.nn.sigmoid(_block_linear(xf, p["gate_i_w"].astype(jnp.float32),
+                                       p["gate_i_b"].astype(jnp.float32)))
+    r_t = jax.nn.sigmoid(_block_linear(xf, p["gate_a_w"].astype(jnp.float32),
+                                       p["gate_a_b"].astype(jnp.float32)))
+    log_a = -C_SCALE * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r_t
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, mult * i_t * xf
+
+
+def rglru_forward(p: dict, x: jax.Array, cfg, state=None):
+    """Full-sequence RG-LRU block.  x: (B, S, D) -> (y, state)."""
+    y_branch = jax.nn.gelu(x @ p["w_y"])
+    xr = x @ p["w_x"]
+    conv_in = None if state is None else state["conv"]
+    xr, conv_state = causal_conv1d(xr, p["conv_w"], p["conv_b"], conv_in)
+    a, bx = _gates(p, xr)                                    # (B, S, R) fp32
+    if state is not None:
+        # seed the scan with the carried hidden state via a virtual step 0
+        bx = bx.at[:, 0].add(a[:, 0] * state["h"].astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    h = hh.astype(x.dtype)                                   # (B, S, R)
+    out = (h * y_branch) @ p["w_out"]
+    return out, {"h": hh[:, -1], "conv": conv_state}
+
+
+def rglru_decode(p: dict, x: jax.Array, cfg, state: dict):
+    """Single-token update.  x: (B, 1, D)."""
+    y_branch = jax.nn.gelu(x @ p["w_y"])
+    xr = x @ p["w_x"]
+    xr, conv_state = causal_conv1d(xr, p["conv_w"], p["conv_b"], state["conv"])
+    a, bx = _gates(p, xr)                                    # (B, 1, R)
+    h = a[:, 0] * state["h"].astype(jnp.float32) + bx[:, 0]
+    out = (h[:, None].astype(x.dtype) * y_branch) @ p["w_out"]
+    return out, {"h": h, "conv": conv_state}
+
+
+def rglru_init_state(cfg, batch: int) -> dict:
+    return {
+        "h": jnp.zeros((batch, cfg.rnn_width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.rnn_width), jnp.float32),
+    }

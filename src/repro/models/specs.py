@@ -1,0 +1,85 @@
+"""Parameter specs: single source of truth for shape, logical axes, init.
+
+A model definition builds a pytree of :class:`ParamSpec`; from it we derive
+(a) materialised parameters, (b) ShapeDtypeStructs for AOT lowering, and
+(c) NamedShardings for any mesh — keeping init and distribution in lockstep.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]       # logical axis names, len == ndim
+    init: str = "normal"               # normal | zeros | ones | scaled
+    scale: float = 1.0
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_param(key: jax.Array, spec: ParamSpec) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "normal":
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = spec.scale / math.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+    if spec.init == "scaled":  # plain N(0, scale)
+        return (spec.scale * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+    raise ValueError(spec.init)
+
+
+def init_tree(key: jax.Array, specs) -> Any:
+    """Materialise a spec pytree into parameters (deterministic per-leaf keys)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    params = [init_param(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, params)
+
+
+def abstract_tree(specs) -> Any:
+    """ShapeDtypeStructs for AOT .lower() without allocating anything."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=is_spec)
+
+
+def shardings_tree(specs, mesh, rules=None) -> Any:
+    """NamedShardings for every parameter on `mesh`."""
+    return jax.tree.map(
+        lambda s: shd.named_sharding(s.shape, s.axes, mesh, rules),
+        specs, is_leaf=is_spec)
+
+
+def partition_specs_tree(specs, mesh, rules=None) -> Any:
+    return jax.tree.map(
+        lambda s: shd.resolve_spec(s.shape, s.axes, mesh, rules),
+        specs, is_leaf=is_spec)
+
+
+def count_params(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def stacked(spec: ParamSpec, n: int) -> ParamSpec:
+    """Add a leading scan ('layers') dimension."""
+    return ParamSpec((n,) + spec.shape, ("layers",) + spec.axes,
+                     spec.init, spec.scale, spec.dtype)

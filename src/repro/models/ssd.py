@@ -1,0 +1,159 @@
+"""Mamba-2 SSD (state-space duality) block — arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+compute *within* fixed-size chunks plus a linear state pass *across* chunks
+(lax.scan).  Decode is the O(1) recurrent update.  All matmul dims are kept
+MXU-friendly (chunk=128, head_dim=64, d_state=128).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import causal_conv1d, rms_norm
+from repro.models.specs import ParamSpec
+
+CHUNK = 128
+
+
+def ssd_dims(cfg) -> dict:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_state
+    return dict(d_inner=d_inner, n_heads=n_heads, conv_dim=conv_dim,
+                p=cfg.ssm_head_dim, n=cfg.ssm_state)
+
+
+def ssd_specs(cfg) -> dict:
+    d = ssd_dims(cfg)
+    zxbcdt = 2 * d["d_inner"] + 2 * d["n"] + d["n_heads"]
+    return {
+        "in_proj": ParamSpec((cfg.d_model, zxbcdt), ("embed", "mlp")),
+        "conv_w": ParamSpec((cfg.conv_width, d["conv_dim"]), ("conv", None),
+                            init="scaled", scale=0.1),
+        "conv_b": ParamSpec((d["conv_dim"],), (None,), init="zeros"),
+        "a_log": ParamSpec((d["n_heads"],), (None,), init="ones"),
+        "d_skip": ParamSpec((d["n_heads"],), (None,), init="ones"),
+        "dt_bias": ParamSpec((d["n_heads"],), (None,), init="zeros"),
+        "norm": ParamSpec((d["d_inner"],), (None,), init="zeros"),
+        "out_proj": ParamSpec((d["d_inner"], cfg.d_model), ("mlp", "embed")),
+    }
+
+
+def _split_zxbcdt(zxbcdt: jax.Array, d: dict):
+    di, n, h = d["d_inner"], d["n"], d["n_heads"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * n]
+    dt = zxbcdt[..., di + di + 2 * n:]
+    assert dt.shape[-1] == h
+    return z, xbc, dt
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise cumulative sums: out[..., i, j] = sum a[j+1..i]."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_forward(p: dict, x: jax.Array, cfg, state=None):
+    """Full-sequence chunked SSD.  x: (B, S, D) -> (y, final_state)."""
+    d = ssd_dims(cfg)
+    b, s, _ = x.shape
+    z, xbc, dt = _split_zxbcdt(x @ p["in_proj"], d)
+    conv_state_in = None if state is None else state["conv"]
+    xbc, conv_state = causal_conv1d(xbc, p["conv_w"], p["conv_b"], conv_state_in)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :d["d_inner"]].reshape(b, s, d["n_heads"], d["p"])
+    B = xbc[..., d["d_inner"]:d["d_inner"] + d["n"]]              # (B, S, N)
+    C = xbc[..., d["d_inner"] + d["n"]:]                          # (B, S, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B, S, H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                  # (H,)
+
+    # chunk size: largest divisor of s up to CHUNK (serving prompts may be
+    # short/odd-length; the assigned shapes are all multiples of 128)
+    if s % CHUNK == 0:
+        q = CHUNK
+    else:
+        q = next(c for c in range(min(CHUNK, s), 0, -1) if s % c == 0)
+    nc = s // q
+    # chunked views
+    xs_c = xs.reshape(b, nc, q, d["n_heads"], d["p"])
+    b_c = B.reshape(b, nc, q, d["n"])
+    c_c = C.reshape(b, nc, q, d["n"])
+    dt_c = dt.reshape(b, nc, q, d["n_heads"])
+    da = dt_c * a                                                  # (B,nc,q,H)
+    da_t = da.transpose(0, 1, 3, 2)                                # (B,nc,H,q)
+    da_cum = jnp.cumsum(da_t, axis=-1)                             # within-chunk
+
+    # intra-chunk (attention-like), fp32 decay math
+    l_mat = jnp.exp(_segsum(da_t))                                 # (B,nc,H,q,q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", c_c, b_c)[:, :, None] * l_mat
+    y_intra = jnp.einsum("bchqk,bckhp,bckh->bcqhp", scores.astype(xs.dtype),
+                         xs_c, dt_c.astype(xs.dtype))
+
+    # per-chunk end states
+    decay_to_end = jnp.exp(da_cum[..., -1:] - da_cum)              # (B,nc,H,q)
+    chunk_states = jnp.einsum("bckn,bckh,bckhp->bchpn",
+                              b_c, (dt_c * decay_to_end.transpose(0, 1, 3, 2)),
+                              xs_c.astype(jnp.float32))
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(da_cum[..., -1])                         # (B,nc,H)
+    s0 = (jnp.zeros((b, d["n_heads"], d["p"], d["n"]), jnp.float32)
+          if state is None else state["ssm"].astype(jnp.float32))
+
+    def scan_body(carry, args):
+        st_in, cd, cs_ = args
+        new = carry * cd[..., None, None] + cs_
+        return new, carry                                          # emit prev state
+
+    xs_scan = (chunk_states.transpose(1, 0, 2, 3, 4),
+               chunk_decay.transpose(1, 0, 2),
+               chunk_states.transpose(1, 0, 2, 3, 4))
+    final_state, prev_states = jax.lax.scan(
+        scan_body, s0, (xs_scan[0], xs_scan[1], xs_scan[2]))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)             # (B,nc,H,P,N)
+
+    # inter-chunk output: decayed prior state read out through C
+    state_decay = jnp.exp(da_cum).transpose(0, 1, 3, 2)            # (B,nc,q,H)
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp",
+                         c_c, prev_states, state_decay)
+
+    y = (y_intra.astype(jnp.float32) + y_inter).reshape(b, s, d["d_inner"])
+    y = y + (xs * p["d_skip"][None, None, :, None]).reshape(b, s, d["d_inner"])
+    y = rms_norm(y.astype(x.dtype), p["norm"]) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return out, {"ssm": final_state, "conv": conv_state}
+
+
+def ssd_decode(p: dict, x: jax.Array, cfg, state: dict):
+    """Single-token recurrent update.  x: (B, 1, D)."""
+    d = ssd_dims(cfg)
+    b = x.shape[0]
+    z, xbc, dt = _split_zxbcdt(x @ p["in_proj"], d)
+    xbc, conv_state = causal_conv1d(xbc, p["conv_w"], p["conv_b"], state["conv"])
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[:, 0, :d["d_inner"]].reshape(b, d["n_heads"], d["p"])
+    B = xbc[:, 0, d["d_inner"]:d["d_inner"] + d["n"]]              # (B, N)
+    C = xbc[:, 0, d["d_inner"] + d["n"]:]
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt1 * a)                                       # (B, H)
+    ssm = state["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bn,bh,bhp->bhpn", B, dt1, xs.astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", C, ssm)                          # (B, H, P)
+    y = y + xs * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, d["d_inner"])
+    y = rms_norm(y.astype(x.dtype), p["norm"]) * jax.nn.silu(z)
+    return y @ p["out_proj"], {"ssm": ssm, "conv": conv_state}
+
+
+def ssd_init_state(cfg, batch: int) -> dict:
+    d = ssd_dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, d["n_heads"], d["p"], d["n"]), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, d["conv_dim"]), jnp.float32),
+    }

@@ -1,0 +1,96 @@
+"""AdamW with fully-sharded state, global-norm clipping, LR schedules.
+
+State lives at the same sharding as the parameters (ZeRO-style: the spec
+tree resolves each tensor's sharding, and m/v inherit it), in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    # "bfloat16" halves m/v HBM (production default at 16 GB/chip; the
+    # update math still runs in f32).  "float32" for small-model examples.
+    state_dtype: str = "float32"
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def init(params, state_dtype: str = "float32") -> OptState:
+    dt = jnp.dtype(state_dtype)
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=dt), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros,
+                    v=jax.tree.map(jnp.copy, zeros))
+
+
+def abstract_state(param_structs, state_dtype: str = "float32") -> OptState:
+    """ShapeDtypeStruct mirror for AOT lowering."""
+    dt = jnp.dtype(state_dtype)
+    z = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, dt),
+                     param_structs)
+    return OptState(step=jax.ShapeDtypeStruct((), jnp.int32), m=z, v=z)
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_ratio."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state: OptState):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1t = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2t = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    state_dt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mh = m32 / b1t
+        vh = v32 / b2t
+        step_ = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step_).astype(p.dtype)
+        return new_p, m32.astype(state_dt), v32.astype(state_dt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(step, new_m, new_v), {"grad_norm": gnorm, "lr": lr}

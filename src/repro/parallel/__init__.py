@@ -1,0 +1,8 @@
+"""Distribution layer: sharding rules, meshes, pipeline, compression."""
+from repro.parallel import sharding
+from repro.parallel.sharding import (RULES_MULTI_POD, RULES_SINGLE_POD,
+                                     constrain, named_sharding, resolve_spec,
+                                     rules_for_mesh)
+
+__all__ = ["sharding", "constrain", "named_sharding", "resolve_spec",
+           "rules_for_mesh", "RULES_SINGLE_POD", "RULES_MULTI_POD"]

@@ -1,0 +1,69 @@
+"""GPipe-style pipeline parallelism over the "pod" axis (optional).
+
+Stage s holds layers [s*L/S, (s+1)*L/S); microbatches stream through with
+``collective_permute`` handoffs inside a ``shard_map`` over the pipeline
+axis.  The schedule is the classic GPipe fill/drain: with M microbatches
+and S stages, bubble fraction = (S-1)/(M+S-1).
+
+Defaults keep pods as pure DP replicas (ICI-poor inter-pod links favour
+DP+FSDP — see DESIGN.md); this module exists for stacks whose weights
+exceed per-pod HBM, and is exercised by tests/test_pipeline.py on a small
+host mesh.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_apply(stage_fn: Callable, params_stacked, x, *,
+                   mesh: Mesh, axis: str = "pod", microbatches: int = 4):
+    """Run a layer-stacked model as a pipeline over `axis`.
+
+    stage_fn(stage_params, x_mb) -> x_mb applies ONE stage's layer slice.
+    params_stacked: pytree with leading dim == n_stages.
+    x: (B, ...) global batch, B % microbatches == 0.  Returns stage_fn
+    composed over all stages, microbatch-pipelined.
+    """
+    n_stages = mesh.shape[axis]
+
+    def body(params_stage, x_local):
+        params_stage = jax.tree.map(lambda p: p[0], params_stage)  # drop stage dim
+        b = x_local.shape[0]
+        mb = b // microbatches
+        stage = jax.lax.axis_index(axis)
+        xs = x_local.reshape(microbatches, mb, *x_local.shape[1:])
+        n_ticks = microbatches + n_stages - 1
+        fwd = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+        def tick(carry, t):
+            buf, outs = carry
+            m = t - stage
+            valid = (m >= 0) & (m < microbatches)
+            m_c = jnp.clip(m, 0, microbatches - 1)
+            inp = jnp.where(stage == 0, xs[m_c], buf)
+            y = stage_fn(params_stage, inp)
+            y = jnp.where(valid, y, buf)
+            outs = jax.lax.cond(
+                valid & (stage == n_stages - 1),
+                lambda o: jax.lax.dynamic_update_slice(
+                    o, y[None], (m_c,) + (0,) * y.ndim),
+                lambda o: o, outs)
+            nxt = jax.lax.ppermute(y, axis, fwd)
+            return (nxt, outs), None
+
+        buf0 = jnp.zeros_like(xs[0])
+        outs0 = jnp.zeros_like(xs)
+        (_, outs), _ = jax.lax.scan(tick, (buf0, outs0), jnp.arange(n_ticks))
+        # results live on the last stage; broadcast via masked psum
+        outs = jnp.where(stage == n_stages - 1, outs, jnp.zeros_like(outs))
+        outs = jax.lax.psum(outs, axis)
+        return outs.reshape(b, *x_local.shape[1:])
+
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=(P(axis), P()),
+                       out_specs=P(), check_vma=False)
+    return fn(params_stacked, x)

@@ -1,0 +1,113 @@
+"""Logical-axis sharding: one rule table maps model-logical axes to mesh axes.
+
+Parameters and activations are annotated with *logical* axes ("embed",
+"mlp", "heads", ...).  A rule table per mesh maps each logical axis to an
+ordered list of candidate mesh axes; resolution is greedy per-tensor:
+a candidate is taken iff the dimension is divisible by the mesh-axis size
+and the mesh axis is not already used by another dimension of the same
+tensor.  This auto-degrades gracefully for awkward shapes (e.g. kv_heads=1
+cannot shard over model=16 -> replicated; mixtral's 8 experts cannot split a
+16-way model axis -> expert weights fall back to TP over d_ff).
+
+Parallelism coverage:
+  DP   - "batch" over (pod, data)
+  FSDP - "embed" (weights' d_model dim) over data  => ZeRO-3-style gathers
+  TP   - "mlp"/"heads"/"vocab" over model
+  EP   - "experts" over model
+  SP   - "kv_seq" (long-context KV caches) over data
+  PP   - optional pipeline over pods (repro.parallel.pipeline)
+"""
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> ordered mesh-axis candidates
+RULES_SINGLE_POD: dict[str, tuple[str, ...]] = {
+    "batch": ("data",),
+    "embed": ("data",),          # FSDP: shard weight d_model over data
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "vocab": ("model", "data"),
+    "experts": ("model",),
+    "moe_cap": ("data",),        # capacity dim (only when experts cannot shard "model")
+    "kv_seq": ("data", "model"),  # SP for KV caches (whichever axis is free)
+    "seq": ("model",),           # sequence-parallel residual stream carries
+    "act_embed": (),             # activations' d_model: replicated
+    "act_heads": ("model",),
+    "layers": (),
+    "conv": (),
+    "state": (),
+}
+
+RULES_MULTI_POD: dict[str, tuple[str, ...]] = {
+    **RULES_SINGLE_POD,
+    "batch": ("pod", "data"),    # DP across pods; ICI-poor inter-pod links
+}
+
+
+def rules_for_mesh(mesh: Mesh) -> dict[str, tuple[str, ...]]:
+    return RULES_MULTI_POD if "pod" in mesh.axis_names else RULES_SINGLE_POD
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def resolve_spec(shape: Sequence[int], axes: Sequence[str | None], mesh: Mesh,
+                 rules: Mapping[str, tuple[str, ...]] | None = None) -> P:
+    """Greedy logical->mesh resolution for one tensor."""
+    rules = rules or rules_for_mesh(mesh)
+    sizes = _mesh_axis_sizes(mesh)
+    used: set[str] = set()
+    out: list = []
+    for dim, name in zip(shape, axes):
+        assignment = None
+        if name is not None:
+            picked: list[str] = []
+            for cand in rules.get(name, ()):
+                if cand in used or cand in picked:
+                    continue
+                size = sizes.get(cand)
+                if size is None:
+                    continue
+                cur = 1
+                for p in picked:
+                    cur *= sizes[p]
+                if dim % (cur * size) == 0:
+                    picked.append(cand)
+                    # only "batch"/"kv_seq" stack multiple mesh axes
+                    if name not in ("batch", "kv_seq"):
+                        break
+            if picked:
+                used.update(picked)
+                assignment = tuple(picked) if len(picked) > 1 else picked[0]
+        out.append(assignment)
+    # trim trailing Nones for tidier specs
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def named_sharding(shape: Sequence[int], axes: Sequence[str | None], mesh: Mesh,
+                   rules: Mapping[str, tuple[str, ...]] | None = None) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(shape, axes, mesh, rules))
+
+
+def constrain(x: jax.Array, axes: Sequence[str | None],
+              mesh: Mesh | None = None,
+              rules: Mapping[str, tuple[str, ...]] | None = None) -> jax.Array:
+    """with_sharding_constraint by logical axes (no-op outside a mesh ctx)."""
+    mesh = mesh or _current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    spec = resolve_spec(x.shape, axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _current_mesh() -> Mesh | None:
+    env = jax._src.mesh.thread_resources.env
+    return env.physical_mesh if env is not None else None

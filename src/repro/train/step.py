@@ -1,0 +1,228 @@
+"""Train / prefill / decode step factories used by the launcher and dry-run.
+
+Each factory returns (step_fn, in_shardings, out_shardings, input_specs)
+so the same code path serves real execution and AOT ``.lower().compile()``.
+Microbatch gradient accumulation happens *inside* the step (scan over
+microbatches) so the global batch of the assigned shapes is honoured
+without blowing activation memory.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCfg
+from repro.models import lm
+from repro.models.specs import abstract_tree, partition_specs_tree, shardings_tree
+from repro.optim import adamw
+from repro.parallel import sharding as shd
+
+
+# ----------------------------- input specs -----------------------------
+
+def batch_struct(cfg: ModelConfig, shape: ShapeCfg) -> dict:
+    """ShapeDtypeStructs for one step's inputs (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.step == "train":
+        if cfg.encdec:
+            return {
+                "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16),
+                "tokens": jax.ShapeDtypeStruct((b, cfg.dec_seq), jnp.int32),
+            }
+        if not cfg.uses_tokens:
+            return {
+                "embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16),
+                "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if shape.step == "prefill":
+        if cfg.encdec:
+            return {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)}
+        if not cfg.uses_tokens:
+            return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)}
+        return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    # decode: one new token against a seq_len cache
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            "cur_index": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeCfg, mesh: Mesh) -> dict:
+    struct = batch_struct(cfg, shape)
+    out = {}
+    for name, sds in struct.items():
+        if name == "cur_index":
+            out[name] = NamedSharding(mesh, P())
+            continue
+        axes = ("batch",) + (None,) * (len(sds.shape) - 1)
+        out[name] = shd.named_sharding(sds.shape, axes, mesh)
+    return out
+
+
+# ----------------------------- train step -----------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig | None = None,
+                    microbatches: int = 1, accum_dtype=jnp.float32):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    accum_dtype=bfloat16 halves the gradient-accumulator HBM at deep
+    microbatching (used by the 16 GB/chip production bundles); each
+    microbatch's grads are computed in f32 and rounded once on accumulate.
+    """
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+
+    def loss_fn(params, batch):
+        loss, metrics = lm.forward_loss(params, cfg, batch, remat=True)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            # Hoist the f32->bf16 cast OUT of the accumulation scan: the
+            # FSDP all-gathers inside the scan then move bf16 weights (half
+            # the bytes), and the cast runs once per step, not per µbatch.
+            # Grad wrt the bf16 copy == grad wrt f32 params (cast is
+            # identity in the cotangent up to rounding already accepted by
+            # accum_dtype).
+            params_c = lm.cast_params(params)
+
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def accum(carry, mb_batch):
+                g_acc, l_acc = carry
+                (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params_c, mb_batch)
+                g_acc = jax.tree.map(
+                    lambda a, g: (a + g.astype(accum_dtype) / microbatches),
+                    g_acc, grads)
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            (grads, loss), _ = jax.lax.scan(accum, (g0, jnp.zeros((), jnp.float32)), mb)
+            loss = loss / microbatches
+            metrics = {}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        new_params, new_opt, opt_metrics = adamw.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        return new_params, new_opt, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, shape: ShapeCfg):
+    def prefill_step(params, batch, caches):
+        if cfg.encdec:
+            return lm.encdec_prefill(params, cfg, batch, caches)
+        logits, caches = lm.prefill(params, cfg, batch, caches)
+        return logits, caches
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, shape: ShapeCfg):
+    def serve_step(params, batch, caches):
+        logits, caches = lm.decode_step(params, cfg, batch["tokens"], caches,
+                                        batch["cur_index"])
+        return logits, caches
+    return serve_step
+
+
+# ----------------------------- AOT bundles -----------------------------
+
+def data_parallel_size(mesh: Mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("data", 1) * sizes.get("pod", 1)
+
+
+def pick_microbatches(cfg: ModelConfig, shape: ShapeCfg, mesh: Mesh,
+                      target_per_device: int | None = None) -> int:
+    """Grad-accumulation depth: keep per-device microbatch <= target."""
+    if target_per_device is None:
+        # wide residual streams / frontend-embedding inputs carry 2-3x the
+        # activation bytes per token — halve the microbatch for those.
+        wide = cfg.d_model >= 6144 or cfg.frontend != "none" or cfg.encdec
+        target_per_device = 2 if wide else 4
+        if cfg.n_experts > 0:
+            # MoE dispatch buffers scale with tokens-per-pass; stream them.
+            target_per_device = 1
+    per_dev = max(1, shape.global_batch // data_parallel_size(mesh))
+    mb = max(1, per_dev // target_per_device)
+    while shape.global_batch % (mb * data_parallel_size(mesh)) and mb > 1:
+        mb -= 1
+    return mb
+
+
+def aot_bundle(cfg: ModelConfig, shape: ShapeCfg, mesh: Mesh,
+               opt_cfg: adamw.AdamWConfig | None = None,
+               microbatches: int | None = None) -> dict[str, Any]:
+    """Everything needed to .lower() one (arch x shape x mesh) cell."""
+    if opt_cfg is None:
+        # production posture at 16 GB/chip: bf16 optimizer state
+        opt_cfg = adamw.AdamWConfig(state_dtype="bfloat16")
+    specs = lm.build_specs(cfg)
+    param_structs = abstract_tree(specs)
+    param_shardings = shardings_tree(specs, mesh)
+    batch_structs = batch_struct(cfg, shape)
+    batch_shards = batch_shardings(cfg, shape, mesh)
+
+    if shape.step == "train":
+        if microbatches is None:
+            microbatches = pick_microbatches(cfg, shape, mesh)
+        accum_dtype = jnp.bfloat16 if microbatches >= 8 else jnp.float32
+        step = make_train_step(cfg, opt_cfg, microbatches=microbatches,
+                               accum_dtype=accum_dtype)
+        opt_structs = adamw.abstract_state(param_structs, opt_cfg.state_dtype)
+        opt_shardings = adamw.OptState(
+            step=NamedSharding(mesh, P()),
+            m=param_shardings, v=jax.tree.map(lambda s: s, param_shardings))
+        return dict(
+            fn=step,
+            args=(param_structs, opt_structs, batch_structs),
+            in_shardings=(param_shardings, opt_shardings, batch_shards),
+            out_shardings=(param_shardings, opt_shardings, None),
+        )
+
+    # inference bundles serve bf16 weights (no optimizer master copy)
+    param_structs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+        param_structs)
+    # Serving avoids FSDP when the TP-sharded weights fit per device:
+    # per-token-step weight all-gathers would dominate decode otherwise.
+    from repro.models.specs import count_params
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    per_dev_bytes = 2 * count_params(specs) / sizes.get("model", 1)
+    if per_dev_bytes <= 3 * 2**30:
+        rules = dict(shd.rules_for_mesh(mesh))
+        rules["embed"] = ()            # replicate over data: no per-step gathers
+        param_shardings = shardings_tree(specs, mesh, rules)
+    b = shape.global_batch
+    cache_structs = lm.abstract_cache(cfg, b, shape.seq_len)
+    cache_layout = lm.cache_layout(cfg, b, shape.seq_len)
+    cache_shardings = jax.tree.map(
+        lambda t: shd.named_sharding(t[0], t[2], mesh), cache_layout,
+        is_leaf=lm._is_layout_leaf)
+
+    if shape.step == "prefill":
+        step = make_prefill_step(cfg, shape)
+        out_shardings = cache_shardings if cfg.encdec else (None, cache_shardings)
+        return dict(
+            fn=step,
+            args=(param_structs, batch_structs, cache_structs),
+            in_shardings=(param_shardings, batch_shards, cache_shardings),
+            out_shardings=out_shardings,
+        )
+
+    step = make_decode_step(cfg, shape)
+    return dict(
+        fn=step,
+        args=(param_structs, batch_structs, cache_structs),
+        in_shardings=(param_shardings, batch_shards, cache_shardings),
+        out_shardings=(None, cache_shardings),
+    )

@@ -1,0 +1,125 @@
+"""Per-arch smoke tests: REDUCED config of the same family, one
+forward/train step on CPU, asserting output shapes + no NaNs (assignment
+requirement).  The FULL configs are exercised via the dry-run only."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import REGISTRY, get_config
+from repro.models import lm
+from repro.models.specs import init_tree
+from repro.optim import adamw
+from repro.train.step import make_train_step
+
+
+def reduced(cfg):
+    """Shrink a full config to laptop scale, preserving the family shape."""
+    kw = dict(
+        d_model=64,
+        n_heads=max(2, min(cfg.n_heads, 4)) if cfg.n_heads else 0,
+        n_kv_heads=(1 if cfg.n_kv_heads == 1 else 2) if cfg.n_kv_heads else 0,
+        head_dim=16 if cfg.head_dim else 0,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab=512,
+        repeats=2 if cfg.repeats > 0 else 0,
+        rnn_width=64 if cfg.rnn_width else 0,
+        ssm_state=32 if cfg.ssm_state else 0,
+        ssm_head_dim=16 if cfg.ssm_state else 64,
+        n_experts=4 if cfg.n_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        enc_layers=2 if cfg.enc_layers else 0,
+        dec_seq=32 if cfg.encdec else 448,
+    )
+    # shrink windows to divide the smoke seq len (128)
+    pattern = tuple(dataclasses.replace(b, window=32 if b.window else 0)
+                    for b in cfg.pattern)
+    tail = tuple(dataclasses.replace(b, window=32 if b.window else 0)
+                 for b in cfg.tail)
+    return dataclasses.replace(cfg, pattern=pattern, tail=tail, **kw)
+
+
+def smoke_batch(cfg, key, batch=2, seq=128):
+    if cfg.encdec:
+        return {"frames": jax.random.normal(key, (batch, seq, cfg.d_model)),
+                "tokens": jax.random.randint(key, (batch, cfg.dec_seq), 1, cfg.vocab)}
+    if not cfg.uses_tokens:
+        return {"embeds": jax.random.normal(key, (batch, seq, cfg.d_model)),
+                "labels": jax.random.randint(key, (batch, seq), 1, cfg.vocab)}
+    return {"tokens": jax.random.randint(key, (batch, seq), 1, cfg.vocab)}
+
+
+@pytest.mark.parametrize("arch", sorted(REGISTRY))
+def test_reduced_forward_loss_finite(arch):
+    cfg = reduced(get_config(arch))
+    key = jax.random.PRNGKey(0)
+    params = init_tree(key, lm.build_specs(cfg))
+    loss, metrics = lm.forward_loss(params, cfg, smoke_batch(cfg, key))
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), (arch, loss)
+
+
+@pytest.mark.parametrize("arch", sorted(REGISTRY))
+def test_reduced_train_step_updates_params(arch):
+    cfg = reduced(get_config(arch))
+    key = jax.random.PRNGKey(1)
+    params = init_tree(key, lm.build_specs(cfg))
+    opt = adamw.init(params)
+    step = jax.jit(make_train_step(cfg, adamw.AdamWConfig(lr=1e-3)))
+    new_params, new_opt, metrics = step(params, opt, smoke_batch(cfg, key))
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert int(new_opt.step) == 1
+    # at least one parameter actually moved
+    moved = jax.tree.reduce(
+        lambda a, b: a or b,
+        jax.tree.map(lambda a, b: bool(jnp.any(a != b)), params, new_params))
+    assert moved, arch
+
+
+@pytest.mark.parametrize("arch", sorted(REGISTRY))
+def test_reduced_decode_step(arch):
+    cfg = reduced(get_config(arch))
+    key = jax.random.PRNGKey(2)
+    params = init_tree(key, lm.build_specs(cfg))
+    caches = lm.init_cache(cfg, batch=2, seq=128)
+    if cfg.encdec:
+        caches = lm.encdec_prefill(params, cfg,
+                                   smoke_batch(cfg, key), caches)
+    if cfg.uses_tokens or cfg.encdec:
+        tok = jnp.ones((2, 1), jnp.int32)
+    else:
+        tok = jax.random.normal(key, (2, 1, cfg.d_model))
+    logits, new_caches = lm.decode_step(params, cfg, tok, caches,
+                                        jnp.asarray(3, jnp.int32))
+    assert logits.shape == (2, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32)))), arch
+
+
+def test_full_configs_match_assignment():
+    """Exact layer counts / dims from the assignment table."""
+    c = get_config("recurrentgemma-9b")
+    assert c.n_layers == 38 and c.d_model == 4096 and c.vocab == 256000
+    c = get_config("qwen3-32b")
+    assert c.n_layers == 64 and c.d_model == 5120 and c.n_heads == 64
+    assert c.n_kv_heads == 8 and c.qk_norm
+    c = get_config("gemma3-1b")
+    assert c.n_layers == 26 and c.d_model == 1152 and c.vocab == 262144
+    locals_ = sum(1 for b in (c.pattern * c.repeats + c.tail) if b.kind == "swa")
+    globals_ = sum(1 for b in (c.pattern * c.repeats + c.tail) if b.kind == "attn")
+    assert locals_ == 22 and globals_ == 4          # ~5:1 local:global
+    c = get_config("granite-3-2b")
+    assert c.n_layers == 40 and c.d_model == 2048 and c.vocab == 49155
+    c = get_config("qwen3-1.7b")
+    assert c.n_layers == 28 and c.d_model == 2048 and c.d_ff == 6144
+    c = get_config("internvl2-26b")
+    assert c.n_layers == 48 and c.d_model == 6144 and c.frontend == "vision"
+    c = get_config("mamba2-130m")
+    assert c.n_layers == 24 and c.d_model == 768 and c.ssm_state == 128
+    c = get_config("dbrx-132b")
+    assert c.n_layers == 40 and c.n_experts == 16 and c.top_k == 4
+    c = get_config("mixtral-8x7b")
+    assert c.n_layers == 32 and c.n_experts == 8 and c.top_k == 2
+    assert c.pattern[0].window == 4096
+    c = get_config("whisper-tiny")
+    assert c.encdec and c.enc_layers == 4 and c.d_model == 384

@@ -1,0 +1,52 @@
+"""Dynamic offset calibration (paper §5.4): the read-retry loop recovers
+the zero-RBER window centre and adapts to wear."""
+import pytest
+
+from repro.core import calibration, rber, vth_model
+
+
+@pytest.fixture(scope="module")
+def chip():
+    return vth_model.get_chip_model()
+
+
+def test_fresh_window_found_and_centered(chip):
+    cal = calibration.calibrate("or", chip, n_pe=0, seed=3)
+    assert cal.zero_window_v > 0.3          # Fig 7a: wide zero window
+    assert abs(cal.best_offset_v) < 0.3     # factory plan is near-optimal
+
+
+def test_window_shrinks_with_wear(chip):
+    fresh = calibration.calibrate("or", chip, n_pe=0, seed=4)
+    worn = calibration.calibrate("or", chip, n_pe=10_000, seed=4)
+    assert worn.zero_window_v < fresh.zero_window_v
+
+
+def test_calibrated_plan_not_worse_when_worn(chip):
+    """§5.4: wear-aware offsets keep RBER at or below the factory plan."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import mcflash, vth_model as vm
+
+    key = jax.random.PRNGKey(9)
+    n = 1 << 19
+    lsb = jax.random.bernoulli(key, 0.5, (n,)).astype(jnp.uint8)
+    msb = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5, (n,)).astype(jnp.uint8)
+    vth, _ = vm.program_page(jax.random.fold_in(key, 2), lsb, msb, chip,
+                             n_pe=10_000, retention_hours=500)
+    want = mcflash.expected_result("or", lsb, msb)
+
+    factory = mcflash.plan_op("or", chip)
+    tuned = calibration.calibrated_plan("or", chip, n_pe=10_000,
+                                        retention_hours=500, seed=10)
+    err_factory = int(jnp.sum(mcflash.execute_plan(factory, vth) != want))
+    err_tuned = int(jnp.sum(mcflash.execute_plan(tuned, vth) != want))
+    assert err_tuned <= err_factory
+
+
+def test_calibration_curve_matches_fig7_shape(chip):
+    cal = calibration.calibrate("or", chip, n_pe=0, span_v=2.0, steps=17, seed=5)
+    # downshifting far puts the ref inside L1 -> ~25% RBER at the left edge
+    assert cal.rber_pct[0] > 10.0
+    assert min(cal.rber_pct) == 0.0
+    assert cal.rber_pct[-1] > 1.0           # far right: inside L2

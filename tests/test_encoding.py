@@ -1,0 +1,60 @@
+"""MLC encoding invariants (paper §2.2, Fig 2 + Fig 4 truth tables)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import encoding
+
+
+def test_gray_code_adjacent_states_differ_by_one_bit():
+    bits = [(int(encoding.LSB_OF_STATE[s]), int(encoding.MSB_OF_STATE[s]))
+            for s in range(4)]
+    for a, b in zip(bits, bits[1:]):
+        assert sum(x != y for x, y in zip(a, b)) == 1
+
+
+def test_encode_decode_roundtrip():
+    lsb = jnp.array([0, 0, 1, 1], jnp.uint8)
+    msb = jnp.array([0, 1, 0, 1], jnp.uint8)
+    states = encoding.encode_mlc(lsb, msb)
+    np.testing.assert_array_equal(encoding.decode_lsb(states), lsb)
+    np.testing.assert_array_equal(encoding.decode_msb(states), msb)
+
+
+def test_state_mapping_matches_paper():
+    # L0=(1,1), L1=(1,0), L2=(0,0), L3=(0,1)
+    assert int(encoding.encode_mlc(jnp.array([1]), jnp.array([1]))[0]) == 0
+    assert int(encoding.encode_mlc(jnp.array([1]), jnp.array([0]))[0]) == 1
+    assert int(encoding.encode_mlc(jnp.array([0]), jnp.array([0]))[0]) == 2
+    assert int(encoding.encode_mlc(jnp.array([0]), jnp.array([1]))[0]) == 3
+
+
+@pytest.mark.parametrize("op", encoding.TWO_OPERAND_OPS)
+def test_truth_tables_match_logical_ops(op):
+    """OP_TRUTH per state must equal the logical op on that state's bits."""
+    for s in range(4):
+        a = int(encoding.LSB_OF_STATE[s])
+        b = int(encoding.MSB_OF_STATE[s])
+        want = int(encoding.logical_op(op, jnp.array([a]), jnp.array([b]))[0])
+        assert encoding.OP_TRUTH[op][s] == want, (op, s)
+
+
+def test_not_truth_on_l2_l3():
+    # NOT uses LSB=0 pages: states L2 (msb=0) and L3 (msb=1)
+    assert encoding.OP_TRUTH["not"][2] == 1
+    assert encoding.OP_TRUTH["not"][3] == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 1), st.integers(0, 1)),
+                min_size=1, max_size=64))
+def test_expected_read_matches_logical_property(pairs):
+    lsb = jnp.array([p[0] for p in pairs], jnp.uint8)
+    msb = jnp.array([p[1] for p in pairs], jnp.uint8)
+    states = encoding.encode_mlc(lsb, msb)
+    for op in encoding.TWO_OPERAND_OPS:
+        got = encoding.expected_read(op, states)
+        want = encoding.logical_op(op, lsb, msb)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

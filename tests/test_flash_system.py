@@ -1,0 +1,108 @@
+"""Flash device + FTL + timing/energy/system models (paper §5.5, §6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.flash import (FTL, EnergyModel, FlashDevice, SystemModel,
+                         TimingModel, bitmap_index, image_encryption,
+                         image_segmentation, isc_time_us, mcflash_time_us,
+                         osc_time_us, speedup_table)
+from repro.kernels import ops as kops
+
+
+def test_fig9_timeline_numbers_exact():
+    t = TimingModel()
+    assert osc_time_us(t) == pytest.approx(2063.0)
+    assert isc_time_us(t) == pytest.approx(1495.0)
+    assert mcflash_time_us(t) == pytest.approx(1087.0)
+    assert mcflash_time_us(t, aligned=False) == pytest.approx(1807.0)
+
+
+def test_read_latency_lsb_msb_match_paper():
+    t = TimingModel()
+    assert t.read_latency_us("and") == pytest.approx(40.0)   # LSB, 1 phase
+    assert t.read_latency_us("or") == pytest.approx(70.0)    # MSB, 2 phases
+    assert t.read_latency_us("xnor") == pytest.approx(130.0)  # SBR, 4 phases
+    assert t.t_setfeature_us < 10.0
+
+
+def test_xnor_energy_51pct_over_and():
+    e = EnergyModel()
+    ratio = e.read_energy_uj_kb("xnor") / e.read_energy_uj_kb("and")
+    assert ratio == pytest.approx(1.51, abs=0.02)
+
+
+def test_device_mcflash_ops_bit_exact(rng):
+    dev = FlashDevice(seed=5)
+    n = dev.config.page_bits
+    lsb = jnp.asarray((rng.random(n) < 0.5).astype(np.uint8))
+    msb = jnp.asarray((rng.random(n) < 0.5).astype(np.uint8))
+    wl = (0, 0, 0)
+    dev.program_shared(wl, lsb, msb)
+    for op in ("and", "or", "xnor", "xor", "nand", "nor"):
+        got = dev.mcflash_read(wl, op, packed=False)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(dev.expected(wl, op)))
+
+
+def test_device_ledger_accounts_time_and_energy():
+    dev = FlashDevice(seed=6)
+    n = dev.config.page_bits
+    wl = (0, 0, 0)
+    dev.program_shared(wl, jnp.zeros(n, jnp.uint8), jnp.ones(n, jnp.uint8))
+    t0 = dev.ledger.makespan_us
+    dev.mcflash_read(wl, "and")
+    assert dev.ledger.makespan_us - t0 == pytest.approx(40.0 + 8.0)  # read+SET_FEATURE
+    assert dev.ledger.energy_uj > 0
+
+
+def test_ftl_aligned_pair_and_chain(rng):
+    dev = FlashDevice(seed=7)
+    ftl = FTL(dev)
+    n = dev.config.page_bits
+    vecs = {name: (rng.random(n) < 0.5).astype(np.uint8)
+            for name in ("a", "b", "c", "d")}
+    ftl.write_pair_aligned("a", jnp.asarray(vecs["a"]), "b", jnp.asarray(vecs["b"]))
+    ftl.write_pair_aligned("c", jnp.asarray(vecs["c"]), "d", jnp.asarray(vecs["d"]))
+    res = ftl.mcflash_chain("and", [("a", "b"), ("c", "d")])
+    want = vecs["a"] & vecs["b"] & vecs["c"] & vecs["d"]
+    got = kops.unpack_bits(res.reshape(1, -1))[0]
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_ftl_realignment_copyback(rng):
+    dev = FlashDevice(seed=8)
+    ftl = FTL(dev)
+    n = dev.config.page_bits
+    a = (rng.random(n) < 0.5).astype(np.uint8)
+    b = (rng.random(n) < 0.5).astype(np.uint8)
+    ftl.write_scattered("a", jnp.asarray(a))
+    ftl.write_scattered("b", jnp.asarray(b))
+    res = ftl.mcflash_compute("xor", "a", "b")   # triggers align()
+    got = kops.unpack_bits(res.reshape(1, -1))[0]
+    np.testing.assert_array_equal(np.asarray(got), a ^ b)
+
+
+def test_wear_tracking_on_erase():
+    dev = FlashDevice(seed=9)
+    dev.erase_block(0, 0)
+    dev.erase_block(0, 0)
+    assert dev.pe_counts[(0, 0)] == 2
+
+
+def test_fig10_speedup_directions():
+    """MCFlash beats OSC/ISC/ParaBit on every workload; FC wins on
+    multi-operand chains (paper: 0.5x-0.96x)."""
+    for wl in (image_segmentation(10_000), image_encryption(5_000),
+               bitmap_index(6)):
+        s = speedup_table(wl)["speedup_vs"]
+        assert s["osc"] > 2.0, (wl.name, s)
+        assert s["isc"] > 1.2, (wl.name, s)
+        assert s["parabit"] > 1.0, (wl.name, s)
+        assert s["mcflash_nonaligned"] > 1.0, (wl.name, s)
+
+
+def test_bitmap_speedup_grows_with_chain_length():
+    s1 = speedup_table(bitmap_index(1))["speedup_vs"]["isc"]
+    s12 = speedup_table(bitmap_index(12))["speedup_vs"]["isc"]
+    assert s12 > s1

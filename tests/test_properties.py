@@ -1,0 +1,127 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import encoding, mcflash, tlc, vth_model
+from repro.kernels import ops as kops, ref
+from repro.launch import hlo_analysis as H
+from repro.parallel import sharding as shd
+
+
+# ------------------------- encoding / sensing --------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_fresh_page_reads_are_involutive(seed):
+    """De Morgan on the device: NAND == NOT(AND) and NOR == NOT(OR),
+    realised purely via inverse read on the same sensing."""
+    chip = vth_model.get_chip_model()
+    key = jax.random.PRNGKey(seed)
+    lsb = jax.random.bernoulli(key, 0.5, (4096,)).astype(jnp.uint8)
+    msb = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5, (4096,)).astype(jnp.uint8)
+    vth, _ = vth_model.program_page(jax.random.fold_in(key, 2), lsb, msb, chip)
+    for base, inv in (("and", "nand"), ("or", "nor"), ("xnor", "xor")):
+        got_base = mcflash.mcflash_op(base, vth, chip)
+        got_inv = mcflash.mcflash_op(inv, vth, chip)
+        np.testing.assert_array_equal(np.asarray(got_inv), 1 - np.asarray(got_base))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(0.0, 4.0))
+def test_vth_respects_verify_windows_when_fresh(seed, _):
+    chip = vth_model.get_chip_model()
+    key = jax.random.PRNGKey(seed)
+    states = jax.random.randint(key, (2048,), 0, 4).astype(jnp.uint8)
+    vth = vth_model.sample_fresh_vth(jax.random.fold_in(key, 1), states, chip)
+    v = np.asarray(vth)
+    s = np.asarray(states)
+    for n in (1, 2, 3):
+        sel = v[s == n]
+        assert (sel >= chip.prog_lo[n - 1] - 1e-5).all()
+        assert (sel <= chip.prog_hi[n - 1] + 1e-5).all()
+    assert (v[s == 0] <= chip.erase_hi + 1e-5).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_tlc_three_operand_ops_match_logic(seed):
+    chip = tlc.TLCChipModel()
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    a, b, c = (jax.random.bernoulli(k, 0.5, (4096,)).astype(jnp.uint8)
+               for k in ks[:3])
+    vth = tlc.program_tlc(ks[3], tlc.encode_tlc(a, b, c), chip)
+    np.testing.assert_array_equal(np.asarray(tlc.and3_read(vth, chip)),
+                                  np.asarray(a & b & c))
+    np.testing.assert_array_equal(np.asarray(tlc.or3_read(vth, chip)),
+                                  np.asarray(a | b | c))
+
+
+# ------------------------- kernels ------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from(["and", "or", "xor"]))
+def test_bitwise_reduce_associativity(seed, op):
+    """reduce(stack) == reduce(reduce(head), tail) — chain composability,
+    the property the FTL's controller-side combine relies on."""
+    rng = np.random.default_rng(seed)
+    stack = jnp.asarray(rng.integers(0, 2**32, (4, 8, 128),
+                                     dtype=np.uint64).astype(np.uint32))
+    full = kops.bitwise_reduce(stack, op=op)
+    head = kops.bitwise_reduce(stack[:2], op=op)
+    two = jnp.stack([head, kops.bitwise_reduce(stack[2:], op=op)])
+    np.testing.assert_array_equal(np.asarray(full),
+                                  np.asarray(kops.bitwise_reduce(two, op=op)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 64), st.integers(0, 2**31 - 1))
+def test_pack_unpack_inverse_property(rows, seed):
+    rng = np.random.default_rng(seed)
+    bits = (rng.random((rows, 4096)) < 0.5).astype(np.uint8)
+    np.testing.assert_array_equal(
+        np.asarray(ref.unpack_bits(ref.pack_bits(jnp.asarray(bits)))), bits)
+
+
+# ------------------------- sharding resolver ---------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.sampled_from([1, 2, 3, 8, 16, 24, 48, 128, 4096]),
+                min_size=1, max_size=4),
+       st.lists(st.sampled_from(["batch", "embed", "mlp", "heads", "kv_seq",
+                                 None]), min_size=1, max_size=4))
+def test_resolver_never_overassigns_axes(dims, names):
+    """Each mesh axis used at most once per tensor; assigned dims always
+    divisible by their mesh-axis product."""
+    n = min(len(dims), len(names))
+    dims, names = dims[:n], names[:n]
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    spec = shd.resolve_spec(dims, names, mesh)
+    flat = []
+    for entry in spec:
+        if entry is None:
+            continue
+        flat.extend(entry if isinstance(entry, tuple) else (entry,))
+    assert len(flat) == len(set(flat))
+
+
+# ------------------------- HLO cost walker -----------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 12), st.sampled_from([128, 256]))
+def test_walker_flops_scale_with_scan_trips(trips, m):
+    def body(c, x):
+        return c @ x, None
+
+    def f(a, xs):
+        return jax.lax.scan(body, a, xs)[0]
+
+    a = jax.ShapeDtypeStruct((m, m), jnp.float32)
+    xs = jax.ShapeDtypeStruct((trips, m, m), jnp.float32)
+    comp = jax.jit(f).lower(a, xs).compile()
+    r = H.analyze(comp)
+    expect = 2.0 * m ** 3 * trips
+    assert abs(r.flops - expect) / expect < 0.05

@@ -1,0 +1,55 @@
+"""RBER reproduction: Table 2 + §5.3/§5.4 qualitative claims."""
+import pytest
+
+from repro.core import rber, vth_model
+
+
+@pytest.fixture(scope="module")
+def chip():
+    return vth_model.get_chip_model()
+
+
+@pytest.mark.parametrize("op", ["and", "or", "xnor", "not"])
+def test_fresh_pages_zero_rber(op, chip):
+    r = rber.measure_rber(op, chip, pages=8, seed=11)
+    assert r.errors == 0, r
+
+
+def test_cycled_rber_small_but_nonzero(chip):
+    r = rber.measure_rber("xnor", chip, pages=48, n_pe=1500, seed=12)
+    assert 0 < r.rber_pct < 0.01, r       # Table 2 band: ~1e-3 %
+
+
+def test_10k_cycles_under_paper_bound(chip):
+    for op in ("and", "or", "xnor", "not"):
+        r = rber.measure_rber(op, chip, pages=12, n_pe=10_000, seed=13)
+        assert r.rber_pct < 0.015 * 1.5, r   # paper: <0.015% (1.5x slack)
+
+
+def test_rber_monotone_in_pe_cycles(chip):
+    r1 = rber.measure_rber("or", chip, pages=12, n_pe=1500, seed=14)
+    r2 = rber.measure_rber("or", chip, pages=12, n_pe=10_000, seed=14)
+    assert r2.errors > r1.errors
+
+
+def test_retention_hurts_and_not_worse_than_and(chip):
+    """Fig 6: NOT/XNOR degrade fastest under retention (L3 shifts most)."""
+    r_and = rber.measure_rber("and", chip, pages=12, n_pe=3000,
+                              retention_hours=1000, seed=15)
+    r_not = rber.measure_rber("not", chip, pages=12, n_pe=3000,
+                              retention_hours=1000, seed=15)
+    assert r_not.errors > r_and.errors
+
+
+def test_and_is_most_robust_op(chip):
+    """§5.3: AND has one sensing phase at the widest margin."""
+    errs = {op: rber.measure_rber(op, chip, pages=24, n_pe=10_000, seed=16).errors
+            for op in ("and", "or", "xnor")}
+    assert errs["and"] <= errs["or"] <= errs["xnor"] * 2
+
+
+@pytest.mark.parametrize("part", sorted(vth_model.CHIP_MODELS))
+def test_all_five_parts_fresh_zero(part):
+    chip = vth_model.get_chip_model(part)
+    r = rber.measure_rber("and", chip, pages=4, seed=17)
+    assert r.errors == 0

@@ -1,0 +1,82 @@
+"""Shifted-read / SBR / inverse-read semantics + Table-1 op plans."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import encoding, mcflash, sensing, vth_model
+
+
+@pytest.fixture(scope="module")
+def chip():
+    return vth_model.get_chip_model()
+
+
+@pytest.fixture(scope="module")
+def programmed(chip):
+    key = jax.random.PRNGKey(42)
+    n = 1 << 16
+    lsb = jax.random.bernoulli(key, 0.5, (n,)).astype(jnp.uint8)
+    msb = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5, (n,)).astype(jnp.uint8)
+    vth, states = vth_model.program_page(jax.random.fold_in(key, 2), lsb, msb, chip)
+    return lsb, msb, vth, states
+
+
+def test_default_reads_decode_stored_data(chip, programmed):
+    lsb, msb, vth, _ = programmed
+    v0, v1, v2 = chip.vref_default
+    np.testing.assert_array_equal(np.asarray(sensing.lsb_read(vth, v1)), np.asarray(lsb))
+    np.testing.assert_array_equal(np.asarray(sensing.msb_read(vth, v0, v2)), np.asarray(msb))
+
+
+def test_inverse_read_complements(chip, programmed):
+    _, msb, vth, _ = programmed
+    v0, _, v2 = chip.vref_default
+    bits = sensing.msb_read(vth, v0, v2)
+    np.testing.assert_array_equal(np.asarray(sensing.inverse_read(bits)),
+                                  1 - np.asarray(msb))
+
+
+def test_sbr_is_xnor_of_two_reads(chip, programmed):
+    _, _, vth, _ = programmed
+    plan = mcflash.plan_op("xnor", chip)
+    neg = sensing.msb_read(vth, *plan.refs[0:2])
+    pos = sensing.msb_read(vth, *plan.refs[2:4])
+    want = 1 - (np.asarray(neg) ^ np.asarray(pos))
+    got = sensing.soft_bit_read(vth, plan.refs[0:2], plan.refs[2:4])
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("op", encoding.TWO_OPERAND_OPS)
+def test_all_ops_bit_exact_on_fresh_pages(op, chip, programmed):
+    lsb, msb, vth, _ = programmed
+    got = mcflash.mcflash_op(op, vth, chip)
+    want = mcflash.expected_result(op, lsb, msb)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_not_with_zero_lsb_init(chip):
+    key = jax.random.PRNGKey(7)
+    n = 1 << 15
+    msb = jax.random.bernoulli(key, 0.5, (n,)).astype(jnp.uint8)
+    lsb = jnp.zeros_like(msb)
+    vth, _ = vth_model.program_page(jax.random.fold_in(key, 1), lsb, msb, chip)
+    got = mcflash.mcflash_op("not", vth, chip)
+    np.testing.assert_array_equal(np.asarray(got), 1 - np.asarray(msb))
+
+
+def test_direct_ops_fail_from_offset_clamp(chip, programmed):
+    """Without inverse read, NAND/NOR/XOR need refs below L0 -> >5% RBER."""
+    lsb, msb, vth, _ = programmed
+    for op in ("nand", "nor", "xor"):
+        got = mcflash.mcflash_op(op, vth, chip, use_inverse_read=False)
+        want = mcflash.expected_result(op, lsb, msb)
+        rber = float(np.mean(np.asarray(got) != np.asarray(want)))
+        assert rber > 0.05, (op, rber)
+
+
+def test_sensing_phase_counts(chip):
+    assert mcflash.plan_op("and", chip).sensing_phases == 1
+    assert mcflash.plan_op("or", chip).sensing_phases == 2
+    assert mcflash.plan_op("not", chip).sensing_phases == 2
+    assert mcflash.plan_op("xnor", chip).sensing_phases == 4

@@ -1,0 +1,95 @@
+"""End-to-end behaviour tests for the paper's system.
+
+Full-stack invariants: operands written through the FTL onto the simulated
+NAND, computed in-flash through the Pallas sensing kernels, results
+bit-exact vs host oracles, and system-level latency/energy consistent with
+the paper's measurements.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import encoding, rber, vth_model
+from repro.flash import FTL, FlashDevice, TimingModel
+from repro.kernels import ops as kops
+
+
+def test_end_to_end_all_ops_bit_exact(rng):
+    """Program -> shifted-read compute -> verify, for every two-operand op."""
+    dev = FlashDevice(seed=42)
+    n = dev.config.page_bits
+    a = jnp.asarray((rng.random(n) < 0.5).astype(np.uint8))
+    b = jnp.asarray((rng.random(n) < 0.5).astype(np.uint8))
+    wl = (3, 7, 11)
+    dev.program_shared(wl, a, b)
+    for op in encoding.TWO_OPERAND_OPS:
+        got = dev.mcflash_read(wl, op, packed=False)
+        want = dev.expected(wl, op)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want)), op
+
+
+def test_repeated_reads_do_not_disturb_data(rng):
+    """§5.1: multiple shifted reads on the same wordline stay bit-exact
+    (reads are non-destructive)."""
+    dev = FlashDevice(seed=1)
+    n = dev.config.page_bits
+    a = jnp.asarray((rng.random(n) < 0.5).astype(np.uint8))
+    b = jnp.asarray((rng.random(n) < 0.5).astype(np.uint8))
+    dev.program_shared((0, 0, 0), a, b)
+    for _ in range(5):
+        for op in ("and", "or", "xnor"):
+            got = dev.mcflash_read((0, 0, 0), op, packed=False)
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(dev.expected((0, 0, 0), op)))
+
+
+def test_wear_increases_rber_through_full_stack():
+    """Blocks cycled through the device wear out; the op error rate grows."""
+    chip = vth_model.get_chip_model()
+    fresh = rber.measure_rber("xnor", chip, pages=8, n_pe=0, seed=5)
+    worn = rber.measure_rber("xnor", chip, pages=8, n_pe=10_000, seed=5)
+    assert fresh.errors == 0
+    assert worn.errors > 0
+
+
+def test_ftl_vector_pipeline_end_to_end(rng):
+    """Multi-page vectors striped across planes: chain + popcount offload."""
+    dev = FlashDevice(seed=9)
+    ftl = FTL(dev)
+    n = 3 * dev.config.page_bits            # 3 pages, crosses planes
+    vecs = {k: (rng.random(n) < 0.6).astype(np.uint8) for k in "abcd"}
+    ftl.write_pair_aligned("a", jnp.asarray(vecs["a"]), "b", jnp.asarray(vecs["b"]))
+    ftl.write_pair_aligned("c", jnp.asarray(vecs["c"]), "d", jnp.asarray(vecs["d"]))
+    res = ftl.mcflash_chain("and", [("a", "b"), ("c", "d")])
+    want = vecs["a"] & vecs["b"] & vecs["c"] & vecs["d"]
+    got = kops.unpack_bits(res.reshape(1, -1))[0]
+    np.testing.assert_array_equal(np.asarray(got), want)
+    count = int(kops.popcount_rows(res.reshape(1, -1))[0])
+    assert count == int(want.sum())
+    # pages striped across three planes (the §6 layout)
+    planes = {wl[0] for wl in ftl.vectors["a"].pages}
+    assert len(planes) == 3
+
+
+def test_latency_accounting_matches_paper_model():
+    dev = FlashDevice(seed=2)
+    t = TimingModel()
+    n = dev.config.page_bits
+    dev.program_shared((0, 0, 0), jnp.zeros(n, jnp.uint8), jnp.ones(n, jnp.uint8))
+    before = dict(dev.ledger.die_busy_us)
+    dev.mcflash_read((0, 0, 0), "xnor")
+    delta = dev.ledger.die_busy_us[0] - before.get(0, 0.0)
+    assert delta == pytest.approx(t.read_latency_us("xnor") + t.t_setfeature_us)
+
+
+def test_energy_scales_with_sensing_phases():
+    dev = FlashDevice(seed=3)
+    n = dev.config.page_bits
+    dev.program_shared((0, 0, 0), jnp.zeros(n, jnp.uint8), jnp.ones(n, jnp.uint8))
+    e0 = dev.ledger.energy_uj
+    dev.mcflash_read((0, 0, 0), "and")
+    e_and = dev.ledger.energy_uj - e0
+    e1 = dev.ledger.energy_uj
+    dev.mcflash_read((0, 0, 0), "xnor")
+    e_xnor = dev.ledger.energy_uj - e1
+    assert e_xnor / e_and == pytest.approx(1.51, abs=0.02)
