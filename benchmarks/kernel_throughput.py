@@ -1,34 +1,43 @@
-"""Kernel micro-benchmarks (interpret mode on CPU — correctness-shaped, the
-TPU numbers come from the §Roofline analysis of the lowered kernels)."""
+"""Backend micro-benchmarks (interpret mode on CPU — correctness-shaped, the
+TPU numbers come from the §Roofline analysis of the lowered kernels).
+
+Times the three :class:`repro.api.Backend` primitives — fused sense+pack,
+packed multi-operand reduce, popcount — on both the Pallas backend and the
+pure-jnp sim backend, so backend overheads are directly comparable.
+"""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timeit
-from repro.kernels import ops
+from repro.api import PallasBackend, PlanCache, SimBackend
+from repro.core.vth_model import get_chip_model
 
 
 def main(quick: bool = True) -> None:
     rng = np.random.default_rng(0)
     rows = 8 if quick else 64
-    vth = jnp.asarray(rng.normal(2.0, 2.0, (rows, 131072)).astype(np.float32))
-    refs = jnp.asarray([0.1, 3.7, 1.9, 5.5], jnp.float32)
-    for kind in ("lsb", "msb", "sbr"):
-        us = timeit(lambda: jax.block_until_ready(
-            ops.mlc_sense(vth, refs, kind=kind)))
-        cells = vth.size
-        emit(f"kernel_mlc_sense_{kind}", us,
-             f"megacells_per_s={cells / us:.0f};pages={rows}")
-    stack = jnp.asarray(rng.integers(0, 2**32, (8, rows, 4096),
-                                     dtype=np.uint64).astype(np.uint32))
-    us = timeit(lambda: jax.block_until_ready(ops.bitwise_reduce(stack, op="and")))
-    emit("kernel_bitwise_reduce8", us,
-         f"gbits_per_s={stack.size * 32 / us / 1e3:.1f}")
+    vth = np.asarray(rng.normal(2.0, 2.0, (rows, 131072)), np.float32)
+    plans = PlanCache()
+    chip = get_chip_model()
+    stack = rng.integers(0, 2**32, (8, rows, 4096), dtype=np.uint64).astype(np.uint32)
     words = stack[0]
-    us = timeit(lambda: jax.block_until_ready(ops.popcount_rows(words)))
-    emit("kernel_popcount", us, f"gbits_per_s={words.size * 32 / us / 1e3:.1f}")
+
+    for backend in (PallasBackend(), SimBackend()):
+        for op, kind in (("and", "lsb"), ("or", "msb"), ("xnor", "sbr")):
+            plan = plans.get(op, chip)
+            us = timeit(lambda: jax.block_until_ready(backend.sense(vth, plan)))
+            emit(f"kernel_{backend.name}_sense_{kind}", us,
+                 f"megacells_per_s={vth.size / us:.0f};pages={rows}")
+        us = timeit(lambda: jax.block_until_ready(backend.reduce(stack, "and")))
+        emit(f"kernel_{backend.name}_reduce8", us,
+             f"gbits_per_s={stack.size * 32 / us / 1e3:.1f}")
+        us = timeit(lambda: jax.block_until_ready(backend.popcount(words)))
+        emit(f"kernel_{backend.name}_popcount", us,
+             f"gbits_per_s={words.size * 32 / us / 1e3:.1f}")
+    emit("kernel_plan_cache", 0.0,
+         f"hits={plans.hits};misses={plans.misses}")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,11 @@
 """In-flash bitmap-index query (paper §6.2) wired into the data pipeline.
 
 Daily user-activity bitmaps live in flash as aligned pairs; the
-"active every day" query runs as an in-flash AND chain with the packed
-bitwise kernel combining per-pair partials, and the bit-count offloads to
-the popcount kernel — exactly the paper's workload, then reused as the
-framework's training-data filter (repro.data.bitmap_pipeline).
+"active every day" query is recorded as a lazy AND chain over
+:class:`repro.api.BitVector` handles and materialized as in-flash senses
+plus ONE fused packed combine; the bit-count offloads to the popcount
+kernel — exactly the paper's workload, then reused as the framework's
+training-data filter (repro.data.bitmap_pipeline).
 
     PYTHONPATH=src python examples/bitmap_index.py
 """
@@ -31,8 +32,11 @@ assert count == int(want.sum())
 print(f"active-every-day users (in-flash AND over {days} days): "
       f"{count} / {n_users}  — matches host oracle")
 
-cmds = bf.device.ledger.commands
-print(f"flash commands issued: {cmds}; die time {bf.device.ledger.makespan_us:.0f} us")
+stats = bf.session.stats()
+print(f"flash commands issued: {stats['ledger']['commands']}; "
+      f"die time {bf.device.ledger.makespan_us:.0f} us; "
+      f"senses {stats['in_flash_senses']}, fused combines {stats['fused_reduce_calls']}, "
+      f"plan cache {stats['plan_cache']}")
 
 # the paper's full-scale projection (800M users, 1-12 months)
 for months in (1, 6, 12):

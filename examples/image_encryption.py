@@ -1,43 +1,41 @@
 """In-flash image encryption (paper §6.2): bulk XOR with a key.
 
-Stores image bitplanes and the keystream as aligned MLC shared pages and
-encrypts *inside the flash array* (one SBR-based XOR read per page pair),
-then decrypts the same way and verifies round-trip bit-exactness.
-End-to-end on the functional device simulator + Pallas kernels.
+Stores image bitplanes and the keystream as aligned MLC shared pages through
+a :class:`repro.api.ComputeSession` and encrypts *inside the flash array*
+(one SBR-based XOR sense per page pair), then decrypts the same way and
+verifies round-trip bit-exactness.  End-to-end on the functional device
+simulator + Pallas kernels.
 
     PYTHONPATH=src python examples/image_encryption.py
 """
 import numpy as np
-import jax.numpy as jnp
 
-from repro.flash import FTL, FlashDevice, image_encryption, speedup_table
-from repro.kernels import ops as kops
+from repro.api import ComputeSession
+from repro.flash import image_encryption, speedup_table
 
 rng = np.random.default_rng(7)
-dev = FlashDevice(seed=7)
-ftl = FTL(dev)
+sess = ComputeSession(backend="pallas", seed=7)
 
 # one 128x128 8-bit grayscale image -> exactly one 16 kB page of bits
 img = rng.integers(0, 256, (128, 128), dtype=np.uint8)
 bits = np.unpackbits(img.reshape(-1))                  # 131072 bits
 key = rng.integers(0, 2, bits.shape[0], dtype=np.uint8)
 
-ftl.write_pair_aligned("img", jnp.asarray(bits), "key", jnp.asarray(key))
-cipher_packed = ftl.mcflash_compute("xor", "img", "key", to_host=False)
-cipher = np.asarray(kops.unpack_bits(cipher_packed.reshape(1, -1))[0])
+img_v, key_v = sess.write_pair("img", bits, "key", key)
+cipher = np.asarray(sess.materialize(img_v ^ key_v, unpacked=True, to_host=False))
 assert not np.array_equal(cipher, bits), "ciphertext must differ from plaintext"
 
 # decrypt: XOR the ciphertext with the key again (write back, sense again)
-ftl2 = FTL(FlashDevice(seed=8))
-ftl2.write_pair_aligned("cipher", jnp.asarray(cipher), "key", jnp.asarray(key))
-plain_packed = ftl2.mcflash_compute("xor", "cipher", "key", to_host=False)
-plain = np.asarray(kops.unpack_bits(plain_packed.reshape(1, -1))[0])
+sess2 = ComputeSession(backend="pallas", seed=8)
+cipher_v, key_v2 = sess2.write_pair("cipher", cipher, "key", key)
+plain = np.asarray(sess2.materialize(cipher_v ^ key_v2, unpacked=True, to_host=False))
 np.testing.assert_array_equal(plain, bits)
 rec = np.packbits(plain).reshape(128, 128)
 np.testing.assert_array_equal(rec, img)
 print("round-trip in-flash XOR encryption: bit-exact OK")
-print(f"simulated die time: {dev.ledger.makespan_us:.0f} us, "
-      f"energy {dev.ledger.energy_uj:.0f} uJ")
+print(f"simulated die time: {sess.ledger.makespan_us:.0f} us, "
+      f"energy {sess.ledger.energy_uj:.0f} uJ, "
+      f"plan cache {sess.stats()['plan_cache']}")
 
 s = speedup_table(image_encryption(5000))["speedup_vs"]
 print(f"\nprojected speedups at 5k images (Fig 10b): "

@@ -1,40 +1,54 @@
-"""Quickstart: MCFlash in 60 seconds.
+"""Quickstart: MCFlash in 60 seconds — through the compute-session API.
 
-Programs two random operand pages into a simulated COTS 3D NAND chip,
-executes every bitwise op in-flash via shifted reads / SBR (through the
-Pallas sensing kernels), verifies bit-exactness, and prints the Fig-9
-system-level timelines.
+Opens a :class:`repro.api.ComputeSession` on a simulated COTS 3D NAND chip,
+registers two random operand vectors as aligned shared pages, records lazy
+bitwise expressions, and materializes every Table-1 op in-flash (shifted
+reads / SBR through the Pallas sensing kernels), verifying bit-exactness.
+Then prints the plan cache behaviour and the Fig-9 system-level timelines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import encoding, mcflash, rber, vth_model
-from repro.flash import (FlashDevice, TimingModel, isc_time_us,
-                         mcflash_time_us, osc_time_us)
+from repro.api import ComputeSession
+from repro.core import encoding, rber
+from repro.flash import (TimingModel, isc_time_us, mcflash_time_us,
+                         osc_time_us)
 
-chip = vth_model.get_chip_model()
+sess = ComputeSession(backend="pallas", seed=0)
+chip = sess.chip
 print(f"chip: {chip.part_number} ({chip.description})\n")
 
-print("== Table-1 read plans ==")
-for op in encoding.ALL_OPS:
-    print("  " + mcflash.plan_op(op, chip).describe())
+print("== Table-1 read plans (compiled once per op through the plan cache) ==")
+for line in sess.describe_plans():
+    print("  " + line)
 
-print("\n== in-flash ops on one 16 kB wordline (simulated device) ==")
-dev = FlashDevice(seed=0)
-key = jax.random.PRNGKey(0)
-n = dev.config.page_bits
-a = jax.random.bernoulli(key, 0.5, (n,)).astype(jnp.uint8)
-b = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5, (n,)).astype(jnp.uint8)
-wl = (0, 0, 0)
-dev.program_shared(wl, a, b)
-for op in ("and", "or", "xnor", "xor"):
-    got = dev.mcflash_read(wl, op, packed=False)
-    ok = bool(jnp.all(got == dev.expected(wl, op)))
-    us = dev.ledger.die_busy_us[0]
+print("\n== lazy in-flash ops on one 16 kB wordline pair ==")
+rng = np.random.default_rng(0)
+n = sess.device.config.page_bits
+a_bits = (rng.random(n) < 0.5).astype(np.uint8)
+b_bits = (rng.random(n) < 0.5).astype(np.uint8)
+a, b = sess.write_pair("a", a_bits, "b", b_bits)
+
+exprs = {
+    "and": a & b,
+    "or": a | b,
+    "xnor": a.xnor(b),
+    "xor": a ^ b,
+    "nand": ~(a & b),           # rewrites to one inverse-read sense
+}
+for op, expr in exprs.items():
+    got = np.asarray(sess.materialize(expr, unpacked=True))
+    want = np.asarray(encoding.logical_op(op, a_bits, b_bits))
+    ok = bool(np.array_equal(got, want))
+    us = sess.ledger.die_busy_us[0]
     print(f"  {op.upper():5s}: bit-exact={ok}  (cumulative die time {us:.0f} us)")
+
+s = sess.stats()
+print(f"\nplan cache: {s['plan_cache']}  "
+      f"(every repeat op was a cache hit — re-planned at most once per op)")
+print(f"in-flash senses: {s['in_flash_senses']}, "
+      f"fused controller combines: {s['fused_reduce_calls']}")
 
 print("\n== RBER vs endurance (paper Table 2 / Fig 6) ==")
 for n_pe in (0, 1500, 10000):

@@ -1,0 +1,53 @@
+"""repro.api — the unified compute-session layer for MCFlash.
+
+The one public way to run MCFlash bulk bitwise compute:
+
+>>> from repro.api import ComputeSession
+>>> sess = ComputeSession(backend="pallas")
+>>> a, b = sess.write_pair("a", bits_a, "b", bits_b)
+>>> mask = (a & b).materialize(unpacked=True)          # one in-flash sense
+>>> hits = (a & b).popcount()
+
+Submodules:
+
+- ``session``    — :class:`ComputeSession` + the one-shot :func:`run_op`.
+- ``graph``      — lazy :class:`BitVector` op DAG + canonicalisation.
+- ``plan_cache`` — keyed Table-1 read-plan cache with hit/miss counters.
+- ``backends``   — :class:`Backend` protocol, :class:`SimBackend` (jnp
+  oracle), :class:`PallasBackend` (fused kernels).
+- ``ledger``     — the unified timing/energy :class:`Ledger`.
+- ``workloads``  — functional execution of the Fig-10 application workloads.
+
+``Ledger`` and ``PlanCache`` import eagerly (they are dependency-light and
+needed by ``repro.flash.device``); everything else resolves lazily to keep
+the ``core <- flash <- api`` layering cycle-free.
+"""
+from repro.api.ledger import Ledger
+from repro.api.plan_cache import PlanCache
+
+_LAZY = {
+    "ComputeSession": "repro.api.session",
+    "run_op": "repro.api.session",
+    "BitVector": "repro.api.graph",
+    "simplify": "repro.api.graph",
+    "Backend": "repro.api.backends",
+    "SimBackend": "repro.api.backends",
+    "PallasBackend": "repro.api.backends",
+    "get_backend": "repro.api.backends",
+    "run_workload": "repro.api.workloads",
+}
+
+__all__ = ["Ledger", "PlanCache", *sorted(_LAZY)]
+
+
+def __getattr__(name: str):
+    module = _LAZY.get(name)
+    if module is None:
+        raise AttributeError(f"module 'repro.api' has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(module), name)
+
+
+def __dir__():
+    return sorted(__all__)

@@ -1,0 +1,56 @@
+"""Unified timing/energy ledger for the compute-session layer.
+
+This is the one accounting object threaded through every execution path —
+the functional device, the FTL placement layer, and :class:`ComputeSession`
+— replacing the ad-hoc per-module accounting that used to live in
+``repro.flash.device``.  Busy time is tracked per resource *kind* (dies,
+channels, host link) so the makespan lower bound falls out of a max, and a
+per-category breakdown (sense / program / erase / transfer) supports the
+session's ``stats()`` reporting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass
+class Ledger:
+    """Per-resource busy-time accounting + total energy."""
+    die_busy_us: Dict[int, float] = dataclasses.field(default_factory=dict)
+    channel_busy_us: Dict[int, float] = dataclasses.field(default_factory=dict)
+    host_busy_us: float = 0.0
+    energy_uj: float = 0.0
+    commands: int = 0
+    # Busy-time breakdown by command category ('sense', 'program', 'erase', ...).
+    category_us: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add_die(self, die: int, us: float, uj: float = 0.0,
+                category: str = "sense") -> None:
+        self.die_busy_us[die] = self.die_busy_us.get(die, 0.0) + us
+        self.category_us[category] = self.category_us.get(category, 0.0) + us
+        self.energy_uj += uj
+        self.commands += 1
+
+    def add_channel(self, ch: int, us: float) -> None:
+        self.channel_busy_us[ch] = self.channel_busy_us.get(ch, 0.0) + us
+        self.category_us["dma"] = self.category_us.get("dma", 0.0) + us
+
+    def add_host(self, us: float) -> None:
+        self.host_busy_us += us
+        self.category_us["host"] = self.category_us.get("host", 0.0) + us
+
+    @property
+    def makespan_us(self) -> float:
+        """Lower-bound makespan: resources of one kind run in parallel."""
+        die = max(self.die_busy_us.values(), default=0.0)
+        ch = max(self.channel_busy_us.values(), default=0.0)
+        return max(die, ch, self.host_busy_us)
+
+    def summary(self) -> dict:
+        return {
+            "makespan_us": self.makespan_us,
+            "energy_uj": self.energy_uj,
+            "commands": self.commands,
+            "category_us": dict(self.category_us),
+        }

@@ -1,0 +1,53 @@
+"""Keyed read-plan cache with hit/miss counters.
+
+``plan_op`` compiles a Table-1 op into quantized DAC references for a given
+chip model; the compilation is cheap but was re-run on *every* page read at
+every entry point.  The session layer plans once per ``(op, chip,
+inverse-read)`` key and replays the cached :class:`ReadPlan` for all
+subsequent senses — the counters make the caching observable (and testable).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from repro.core.mcflash import ReadPlan, plan_op
+from repro.core.vth_model import ChipModel
+
+PlanKey = Tuple[str, ChipModel, bool]
+
+
+class PlanCache:
+    """Caches compiled :class:`ReadPlan`s per (op, chip model, inverse-read)."""
+
+    def __init__(self) -> None:
+        self._plans: Dict[PlanKey, ReadPlan] = {}
+        self.hits = 0
+        self.misses = 0
+        self._miss_counts: Dict[PlanKey, int] = {}
+
+    def get(self, op: str, chip: ChipModel, use_inverse_read: bool = True) -> ReadPlan:
+        key: PlanKey = (op, chip, bool(use_inverse_read))
+        plan = self._plans.get(key)
+        if plan is None:
+            plan = plan_op(op, chip, use_inverse_read)
+            self._plans[key] = plan
+            self.misses += 1
+            self._miss_counts[key] = self._miss_counts.get(key, 0) + 1
+        else:
+            self.hits += 1
+        return plan
+
+    def misses_for(self, op: str, chip: ChipModel, use_inverse_read: bool = True) -> int:
+        """How many times this key was actually (re)planned."""
+        return self._miss_counts.get((op, chip, bool(use_inverse_read)), 0)
+
+    def clear(self) -> None:
+        self._plans.clear()
+        self._miss_counts.clear()
+        self.hits = self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses, "entries": len(self._plans)}

@@ -1,0 +1,316 @@
+"""ComputeSession: the one public way to run MCFlash bulk bitwise compute.
+
+A session owns (or wraps) a simulated flash device + FTL, registers named
+bit-vectors as :class:`BitVector` handles, records bitwise expressions into a
+lazy op DAG, and on :meth:`materialize`:
+
+1. canonicalises the DAG (:func:`repro.api.graph.simplify`) — associative
+   chains fuse into one k-ary node, ``~(a & b)`` becomes an inverse-read NAND;
+2. compiles every op it touches through a per-chip keyed :class:`PlanCache`
+   (hit/miss counters exposed via :meth:`stats`);
+3. dispatches batched multi-plane execution: all pages of an aligned pair go
+   through **one** backend sense call, and all chain partials through **one**
+   ``bitwise_reduce`` combine;
+4. threads the unified timing/energy :class:`~repro.api.ledger.Ledger`
+   through every command.
+
+Backends are pluggable (:class:`SimBackend` oracle / :class:`PallasBackend`
+kernels) and bit-exact against each other.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.backends import Backend, get_backend
+from repro.api.graph import ASSOCIATIVE, BASE_OF, BitVector, Leaf, Node, Op, simplify
+from repro.api.plan_cache import PlanCache
+from repro.core import encoding
+from repro.core import mcflash as _mcflash
+from repro.core.mcflash import ReadPlan
+from repro.core.vth_model import ChipModel
+from repro.kernels import ops as kops
+
+__all__ = ["ComputeSession", "run_op"]
+
+
+class ComputeSession:
+    """Session-level MCFlash compute over named bit-vector handles."""
+
+    def __init__(self, device=None, *, backend: "str | Backend" = "pallas",
+                 ftl=None, chip=None, config=None, timing=None, energy=None,
+                 seed: int = 0):
+        # Deferred imports keep repro.api import-light and cycle-free.
+        from repro.flash.device import FlashDevice
+        from repro.flash.ftl import FTL
+
+        build_kwargs = {"chip": chip, "config": config, "timing": timing,
+                        "energy": energy}
+        if (ftl is not None or device is not None) and (
+                any(v is not None for v in build_kwargs.values()) or seed != 0):
+            given = [k for k, v in build_kwargs.items() if v is not None]
+            if seed != 0:
+                given.append("seed")
+            raise ValueError(
+                f"{given} only apply when the session constructs its own "
+                "device; configure the FlashDevice you pass in instead")
+        if ftl is not None:
+            if device is not None and device is not ftl.device:
+                raise ValueError("device and ftl disagree; pass one or the other")
+            self.ftl = ftl
+            self.device = ftl.device
+        else:
+            self.device = device or FlashDevice(seed=seed, **build_kwargs)
+            # Reuse the device's existing FTL (a fresh one would restart the
+            # wordline allocator and overwrite already-programmed pages).
+            self.ftl = getattr(self.device, "ftl", None) or FTL(self.device)
+        # Make this session the FTL's session so the compute shims
+        # (FTL.mcflash_compute/chain) run on this backend, not a hidden
+        # default-pallas one.  Latest session wins, consistent with
+        # set_default_backend above.
+        self.ftl._session = self
+        self.backend: Backend = get_backend(backend)
+        # Device-internal reads (copyback realignment) follow this session's
+        # backend choice too — a sim session never touches Pallas.
+        self.device.set_default_backend(self.backend)
+        self.plans: PlanCache = self.device.plans     # shared per-chip plan cache
+        self.ledger = self.device.ledger
+        self.fused_reduce_calls = 0
+        self.in_flash_senses = 0
+        self._tail_masks: Dict[Tuple[int, int], jnp.ndarray] = {}
+
+    # -- registration --------------------------------------------------------
+    def write(self, name: str, bits: jnp.ndarray, role: str = "lsb") -> BitVector:
+        """Store a single named bit-vector (scattered; realigned on demand)."""
+        self.ftl.write_scattered(name, jnp.asarray(bits), role=role)
+        return self.vector(name)
+
+    def write_pair(self, name_a: str, bits_a: jnp.ndarray,
+                   name_b: str, bits_b: jnp.ndarray) -> Tuple[BitVector, BitVector]:
+        """Store two operands co-located on shared wordlines (the fast path)."""
+        self.ftl.write_pair_aligned(name_a, jnp.asarray(bits_a),
+                                    name_b, jnp.asarray(bits_b))
+        return self.vector(name_a), self.vector(name_b)
+
+    def vector(self, name: str) -> BitVector:
+        """Handle to an already-registered vector."""
+        meta = self.ftl.vectors[name]
+        return BitVector(self, Leaf(name), meta.n_bits)
+
+    def __getitem__(self, name: str) -> BitVector:
+        return self.vector(name)
+
+    def chain(self, op: str, operands: "Iterable[BitVector | str]") -> BitVector:
+        """Fold handles (or registered names) into one lazy k-ary op node.
+
+        ``op`` must be associative ('and' | 'or' | 'xor'); the result
+        materializes as per-pair in-flash senses plus one fused combine.
+        """
+        if op not in ASSOCIATIVE:
+            raise ValueError(f"chains are associative ops only, got {op!r}")
+        vecs = [self.vector(v) if isinstance(v, str) else v for v in operands]
+        if not vecs:
+            raise ValueError("empty operand chain")
+        expr = vecs[0]
+        for v in vecs[1:]:
+            expr = expr._binary(op, v)
+        return expr
+
+    # -- planning ------------------------------------------------------------
+    @property
+    def chip(self) -> ChipModel:
+        return self.device.chip
+
+    def plan(self, op: str, use_inverse_read: bool = True) -> ReadPlan:
+        """Cached Table-1 read plan for this session's chip model."""
+        return self.plans.get(op, self.chip, use_inverse_read)
+
+    def describe_plans(self, ops: Iterable[str] = encoding.ALL_OPS) -> List[str]:
+        return [self.plan(op).describe() for op in ops]
+
+    # -- execution -----------------------------------------------------------
+    def materialize(self, expr: BitVector, *, unpacked: bool = False,
+                    to_host: bool = True) -> jnp.ndarray:
+        """Compile + execute the expression DAG; returns the result vector.
+
+        Packed (uint32 words) by default — page-padded, with any bits beyond
+        ``expr.n_bits`` masked to zero; ``unpacked=True`` returns per-cell
+        uint8 bits trimmed to exactly ``expr.n_bits``.  ``to_host`` accounts
+        the final controller->host transfer in the ledger.
+        """
+        node = simplify(expr.node)
+        packed = self._mask_tail(self._eval(node, memo={}), expr.n_bits)
+        if to_host:
+            self.device.ext_to_host(int(packed.shape[-1]) * 4)
+        if unpacked:
+            return kops.unpack_bits(packed.reshape(1, -1))[0][: expr.n_bits]
+        return packed
+
+    def _mask_tail(self, packed: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+        """Zero the page-padding bits past ``n_bits`` (inverse-read ops turn
+        padded zeros into ones, which would corrupt popcounts and packed
+        consumers)."""
+        total = int(packed.shape[0]) * 32
+        if n_bits >= total:
+            return packed
+        mask = self._tail_masks.get((n_bits, total))
+        if mask is None:
+            bits = np.zeros(total, np.uint8)
+            bits[:n_bits] = 1
+            mask = kops.pack_bits(jnp.asarray(bits).reshape(1, -1))[0]
+            self._tail_masks[(n_bits, total)] = mask
+        return packed & mask
+
+    def popcount(self, expr: BitVector, *, to_host: bool = True) -> int:
+        """Materialize + bit-count through the backend's popcount kernel."""
+        packed = self.materialize(expr, to_host=to_host)
+        return int(self.backend.popcount(packed.reshape(1, -1))[0])
+
+    def stats(self) -> dict:
+        return {
+            "backend": self.backend.name,
+            "plan_cache": self.plans.stats(),
+            "fused_reduce_calls": self.fused_reduce_calls,
+            "in_flash_senses": self.in_flash_senses,
+            "ledger": self.ledger.summary(),
+        }
+
+    # -- DAG evaluation ------------------------------------------------------
+    def _eval(self, node: Node, memo: Dict[Node, jnp.ndarray]) -> jnp.ndarray:
+        """Evaluate a canonical node to a packed 1-D uint32 vector."""
+        out = memo.get(node)
+        if out is not None:
+            return out
+        if isinstance(node, Leaf):
+            out = self._read_leaf(node.name)
+        elif node.op == "not":
+            (x,) = node.args
+            if isinstance(x, Leaf):
+                out = self._sense_not_leaf(x.name)
+            else:
+                out = self._combine([self._eval(x, memo)], "and", invert=True)
+        else:
+            out = self._eval_chain(node, memo)
+        memo[node] = out
+        return out
+
+    def _eval_chain(self, node: Op, memo: Dict[Node, jnp.ndarray]) -> jnp.ndarray:
+        """k-ary op node: per-pair in-flash senses + one fused combine."""
+        op = node.op
+        base = BASE_OF.get(op, op)
+        invert = op in BASE_OF
+        assert base in ASSOCIATIVE or op == "xnor" or len(node.args) == 2, node
+        # Exactly two stored operands: a single (possibly inverse-read) sense.
+        if len(node.args) == 2 and all(isinstance(a, Leaf) for a in node.args):
+            return self._sense_pair(op, node.args[0].name, node.args[1].name)
+        leaves = [a for a in node.args if isinstance(a, Leaf)]
+        others = [a for a in node.args if not isinstance(a, Leaf)]
+        pairs, leftover = self._pair_leaves(leaves)
+        partials = [self._sense_pair(base, a, b) for a, b in pairs]
+        if leftover is not None:
+            partials.append(self._read_leaf(leftover))
+        partials.extend(self._eval(o, memo) for o in others)
+        return self._combine(partials, base, invert=invert)
+
+    def _pair_leaves(self, leaves: List[Leaf]) -> Tuple[List[Tuple[str, str]], "str | None"]:
+        """Pair operand names for shared-wordline senses.
+
+        Already-aligned partners pair first (no realignment cost); the rest
+        pair greedily (each costs one copyback realignment, the paper's
+        non-aligned path).  An odd leftover is read out as its own partial.
+        """
+        names = [l.name for l in leaves]
+        used: set = set()
+        pairs: List[Tuple[str, str]] = []
+        rest: List[str] = []
+        for i, n in enumerate(names):
+            if i in used:
+                continue
+            partner = self.ftl._pair_of.get(n)
+            j = next((k for k in range(i + 1, len(names))
+                      if k not in used and names[k] == partner), None)
+            if j is not None:
+                pairs.append((n, partner))
+                used.update((i, j))
+            else:
+                rest.append(n)
+                used.add(i)
+        while len(rest) >= 2:
+            pairs.append((rest.pop(0), rest.pop(0)))
+        return pairs, (rest[0] if rest else None)
+
+    def _sense_pages(self, pages, op: str) -> jnp.ndarray:
+        """Batched in-flash sense over a page set + DMA accounting -> packed
+        1-D words (page-aligned; the tail is masked at materialize)."""
+        out = self.device.mcflash_read_batch(pages, op, plan=self.plan(op),
+                                             backend=self.backend)
+        self.in_flash_senses += 1
+        for wl in pages:
+            self.device.dma_to_controller(wl)
+        return out.reshape(-1)
+
+    def _sense_pair(self, op: str, name_a: str, name_b: str) -> jnp.ndarray:
+        """One in-flash sense over an aligned pair, batched across its pages."""
+        ftl = self.ftl
+        if ftl._pair_of.get(name_a) != name_b:
+            ftl.align(name_a, name_b)
+        return self._sense_pages(ftl.vectors[name_a].pages, op)
+
+    def _read_leaf(self, name: str) -> jnp.ndarray:
+        """Standard (default-reference) read of a stored vector -> packed,
+        batched across its pages like the sense paths."""
+        meta = self.ftl.vectors[name]
+        out = self.device.page_read_batch(meta.pages, meta.role,
+                                          backend=self.backend)
+        for wl in meta.pages:
+            self.device.dma_to_controller(wl)
+        return out.reshape(-1)
+
+    def _sense_not_leaf(self, name: str) -> jnp.ndarray:
+        """In-flash NOT: the operand must sit in the MSB page over a zero LSB
+        page (paper Table 1).  Vectors stored any other way are copyback-
+        rewritten once into a NOT-ready placement (cached under a derived
+        name) — the same realignment cost model as scattered operand pairs.
+        """
+        ftl = self.ftl
+        meta = ftl.vectors[name]
+        if not (meta.role == "msb" and name not in ftl._pair_of):
+            copy = ftl.derived_not_name(name)
+            if copy not in ftl.vectors:
+                packed = self._read_leaf(name)
+                bits = kops.unpack_bits(packed.reshape(1, -1))[0][: meta.n_bits]
+                ftl.write_scattered(copy, bits, role="msb")
+            meta = ftl.vectors[copy]
+        return self._sense_pages(meta.pages, "not")
+
+    def _combine(self, partials: List[jnp.ndarray], op: str,
+                 invert: bool = False) -> jnp.ndarray:
+        """Controller-side combine of chain partials: ONE fused reduce call."""
+        if len(partials) == 1 and not invert:
+            return partials[0]
+        stack = jnp.stack(partials).reshape(len(partials), 1, -1)
+        self.fused_reduce_calls += 1
+        return self.backend.reduce(stack, op, invert=invert).reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Module-level one-shot path (the target of the `mcflash_op` shim): plan via a
+# process-wide cache, execute with the reference sensing semantics.
+
+_GLOBAL_PLANS = PlanCache()
+
+
+def run_op(op: str, vth: jnp.ndarray, chip: ChipModel,
+           use_inverse_read: bool = True,
+           backend: "str | Backend | None" = None) -> jnp.ndarray:
+    """One-shot MCFlash op on a raw Vth array through the session-layer
+    plan cache.  With ``backend=None`` returns per-cell bits (the historical
+    ``mcflash_op`` contract, any input shape); with a backend, ``vth`` must be
+    (R, C) with C a multiple of 4096 and the result is packed uint32.
+    """
+    plan = _GLOBAL_PLANS.get(op, chip, use_inverse_read)
+    if backend is None:
+        return _mcflash.execute_plan(plan, vth)
+    return get_backend(backend).sense(vth, plan)

@@ -25,7 +25,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import encoding, sensing
@@ -110,8 +109,15 @@ def execute_plan(plan: ReadPlan, vth: jnp.ndarray) -> jnp.ndarray:
 
 def mcflash_op(op: str, vth: jnp.ndarray, chip: ChipModel,
                use_inverse_read: bool = True) -> jnp.ndarray:
-    """One-shot: plan + execute an MCFlash bitwise op on a programmed page."""
-    return execute_plan(plan_op(op, chip, use_inverse_read), vth)
+    """One-shot: plan + execute an MCFlash bitwise op on a programmed page.
+
+    Deprecated entry point — forwards to :func:`repro.api.run_op`, which
+    plans through the session layer's keyed plan cache.  Prefer
+    :class:`repro.api.ComputeSession` for anything beyond a single page.
+    """
+    from repro.api.session import run_op   # deferred: api layers on top of core
+
+    return run_op(op, vth, chip, use_inverse_read)
 
 
 def expected_result(op: str, lsb_bits: jnp.ndarray, msb_bits: jnp.ndarray) -> jnp.ndarray:

@@ -3,39 +3,42 @@
 The framework-level integration of the paper's technique: per-sample quality
 / dedup / domain bitmaps live on the simulated SSD as aligned shared pages;
 sample selection for a training epoch evaluates the filter predicate as an
-**in-flash AND chain** (one MCFlash sense per pair + packed combine), so
-only the final selection bitmap — not the constituent bitmaps — crosses to
-the host.  Mirrors the paper's bitmap-index case study (§6.2) inside the
-training stack.
+**in-flash AND chain** through :class:`repro.api.ComputeSession` (one MCFlash
+sense per pair + one fused packed combine), so only the final selection
+bitmap — not the constituent bitmaps — crosses to the host.  Mirrors the
+paper's bitmap-index case study (§6.2) inside the training stack.
 """
 from __future__ import annotations
 
 import numpy as np
-import jax.numpy as jnp
 
-from repro.flash.device import FlashDevice
-from repro.flash.ftl import FTL
-from repro.kernels import ops as kops
+from repro.api.session import ComputeSession
 
 
 class BitmapFilter:
     """Holds named per-sample bitmaps in flash; evaluates AND-chains in-flash."""
 
-    def __init__(self, n_samples: int, device: FlashDevice | None = None):
-        # round up to whole pages
-        self.device = device or FlashDevice(seed=17)
-        self.ftl = FTL(self.device)
-        page_bits = self.device.config.page_bits
+    def __init__(self, n_samples: int, session: ComputeSession | None = None,
+                 backend: str = "pallas"):
+        self.session = session or ComputeSession(backend=backend, seed=17)
+        page_bits = self.session.device.config.page_bits
         self.n_samples = n_samples
+        # round up to whole pages
         self.n_bits = ((n_samples + page_bits - 1) // page_bits) * page_bits
         self._names: list[str] = []
+
+    @property
+    def device(self):
+        return self.session.device
+
+    @property
+    def ftl(self):
+        return self.session.ftl
 
     def add_pair(self, name_a: str, bits_a: np.ndarray,
                  name_b: str, bits_b: np.ndarray) -> None:
         """Store two filter bitmaps co-located (aligned LSB/MSB pages)."""
-        a = self._pad(bits_a)
-        b = self._pad(bits_b)
-        self.ftl.write_pair_aligned(name_a, jnp.asarray(a), name_b, jnp.asarray(b))
+        self.session.write_pair(name_a, self._pad(bits_a), name_b, self._pad(bits_b))
         self._names += [name_a, name_b]
 
     def _pad(self, bits: np.ndarray) -> np.ndarray:
@@ -44,13 +47,14 @@ class BitmapFilter:
         out[: self.n_samples] = bits.astype(np.uint8)
         return out
 
+    def _expr(self, pairs: list[tuple[str, str]]):
+        return self.session.chain("and", [n for pair in pairs for n in pair])
+
     def select(self, pairs: list[tuple[str, str]]) -> np.ndarray:
         """In-flash AND chain over filter pairs -> boolean sample mask."""
-        packed = self.ftl.mcflash_chain("and", pairs)
-        bits = kops.unpack_bits(packed.reshape(1, -1))[0]
+        bits = self.session.materialize(self._expr(pairs), unpacked=True)
         return np.asarray(bits[: self.n_samples]).astype(bool)
 
     def count(self, pairs: list[tuple[str, str]]) -> int:
         """Selection cardinality via the popcount kernel (host bit-count)."""
-        packed = self.ftl.mcflash_chain("and", pairs)
-        return int(kops.popcount_rows(packed.reshape(1, -1))[0])
+        return self.session.popcount(self._expr(pairs))

@@ -3,7 +3,8 @@
 - ``geometry``: SSD/NAND organisation (16 ch x 8 die x 4 plane, 16 kB pages).
 - ``device``: functional NAND array (Vth state, plans via Pallas kernels,
   P/E tracking, time/energy ledger).
-- ``ftl``: allocation, wear leveling, operand alignment, vector compute.
+- ``ftl``: allocation, wear leveling, operand alignment (vector compute
+  lives in :mod:`repro.api`; FTL keeps thin forwarding shims).
 - ``timing`` / ``energy``: calibrated latency & energy models (§5.5, Fig 8/9).
 - ``system``: k-operand OSC/ISC/ParaBit/Flash-Cosmos/MCFlash comparison model.
 """

@@ -1,21 +1,28 @@
 """Functional simulated NAND flash device.
 
 Holds per-wordline Vth tensors (sparsely, only programmed wordlines),
-executes MCFlash read plans through the Pallas sense kernels, tracks P/E
-cycles per block, and keeps a command **ledger** (time + energy) so that
+executes MCFlash read plans through a pluggable backend (Pallas sense
+kernels by default), tracks P/E cycles per block, and threads the unified
+:class:`repro.api.Ledger` (time + energy) through every command so that
 application workloads derive their latency/energy from the *actual simulated
 command stream* rather than hand-waved constants.
+
+Read plans compile once per (op, chip) through the device's
+:class:`repro.api.PlanCache`; multi-page ops dispatch through
+:meth:`mcflash_read_batch`, which senses all pages of a batch in one fused
+kernel call while accounting a single SET_FEATURE switch.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.api.ledger import Ledger
+from repro.api.plan_cache import PlanCache
 from repro.core import mcflash, vth_model
-from repro.core.encoding import OP_SENSING_PHASES
+from repro.core.mcflash import ReadPlan
 from repro.core.vth_model import ChipModel
 from repro.flash.energy import EnergyModel
 from repro.flash.geometry import SSDConfig
@@ -23,34 +30,6 @@ from repro.flash.timing import TimingModel
 from repro.kernels import ops as kops
 
 WordlineKey = Tuple[int, int, int]  # (plane, block, wordline)
-
-
-@dataclasses.dataclass
-class Ledger:
-    """Per-resource busy-time accounting + total energy."""
-    die_busy_us: Dict[int, float] = dataclasses.field(default_factory=dict)
-    channel_busy_us: Dict[int, float] = dataclasses.field(default_factory=dict)
-    host_busy_us: float = 0.0
-    energy_uj: float = 0.0
-    commands: int = 0
-
-    def add_die(self, die: int, us: float, uj: float = 0.0) -> None:
-        self.die_busy_us[die] = self.die_busy_us.get(die, 0.0) + us
-        self.energy_uj += uj
-        self.commands += 1
-
-    def add_channel(self, ch: int, us: float) -> None:
-        self.channel_busy_us[ch] = self.channel_busy_us.get(ch, 0.0) + us
-
-    def add_host(self, us: float) -> None:
-        self.host_busy_us += us
-
-    @property
-    def makespan_us(self) -> float:
-        """Lower-bound makespan: resources of one kind run in parallel."""
-        die = max(self.die_busy_us.values(), default=0.0)
-        ch = max(self.channel_busy_us.values(), default=0.0)
-        return max(die, ch, self.host_busy_us)
 
 
 class FlashDevice:
@@ -69,8 +48,18 @@ class FlashDevice:
         self._operands: Dict[WordlineKey, Tuple[jnp.ndarray, jnp.ndarray]] = {}
         self.pe_counts: Dict[Tuple[int, int], int] = {}
         self.ledger = Ledger()
+        self.plans = PlanCache()
+        from repro.api.backends import PallasBackend   # layers on kernels only
+        self._default_backend = PallasBackend()
         self._key = jax.random.PRNGKey(seed)
         self._page_bits = self.config.page_bits
+        self.ftl = None                # first-bound FTL registers itself here
+
+    def set_default_backend(self, backend) -> None:
+        """Backend used when a command doesn't pass one explicitly (sessions
+        install their backend here so e.g. copyback realignment reads follow
+        the session's sim/Pallas choice)."""
+        self._default_backend = backend
 
     # -- geometry helpers ---------------------------------------------------
     def _die_of_plane(self, plane: int) -> int:
@@ -98,46 +87,74 @@ class FlashDevice:
         die = self._die_of_plane(plane)
         # MLC shared-page program: 2 pages' worth of ISPP
         self.ledger.add_die(die, 2 * self.timing.t_prog_us,
-                            2 * self.energy.e_prog_uj_kb * self.config.page_kb)
+                            2 * self.energy.e_prog_uj_kb * self.config.page_kb,
+                            category="program")
+
+    def mcflash_read_batch(self, wls: List[WordlineKey], op: str, *,
+                           plan: ReadPlan | None = None, backend=None,
+                           switch_op: bool = True) -> jnp.ndarray:
+        """Execute one MCFlash op over a batch of programmed wordlines.
+
+        All pages sense through **one** backend call ((N, page_bits) Vth
+        stack -> (N, words) packed results); the SET_FEATURE offset switch is
+        accounted once for the whole batch — the multi-plane dispatch path
+        the paper's §6 layout assumes.
+        """
+        assert wls, "empty wordline batch"
+        if plan is None:
+            plan = self.plans.get(op, self.chip)
+        for i, wl in enumerate(wls):
+            die = self._die_of_plane(wl[0])
+            us = self.timing.op_latency_us(op, switch_op=switch_op and i == 0)
+            uj = self.energy.read_energy_uj_kb(op) * self.config.page_kb
+            self.ledger.add_die(die, us, uj)
+        stack = jnp.stack([self._vth[wl] for wl in wls])
+        if backend is None:
+            backend = self._default_backend
+        return backend.sense(stack, plan)
 
     def mcflash_read(self, wl: WordlineKey, op: str, packed: bool = True,
-                     switch_op: bool = True) -> jnp.ndarray:
-        """Execute an MCFlash bitwise op on a programmed wordline."""
-        vth = self._vth[wl]
-        plan = mcflash.plan_op(op, self.chip)
-        plane = wl[0]
-        die = self._die_of_plane(plane)
-        us = self.timing.op_latency_us(op, switch_op=switch_op)
-        uj = self.energy.read_energy_uj_kb(op) * self.config.page_kb
-        self.ledger.add_die(die, us, uj)
-        packed_bits = kops.sense_plan(vth.reshape(1, -1), plan)
+                     switch_op: bool = True, *, plan: ReadPlan | None = None,
+                     backend=None) -> jnp.ndarray:
+        """Execute an MCFlash bitwise op on a single programmed wordline."""
+        packed_bits = self.mcflash_read_batch([wl], op, plan=plan,
+                                              backend=backend,
+                                              switch_op=switch_op)
         return packed_bits[0] if packed else kops.unpack_bits(packed_bits)[0]
 
-    def page_read(self, wl: WordlineKey, which: str = "lsb",
-                  packed: bool = True) -> jnp.ndarray:
-        """Standard (default-reference) page read."""
-        vth = self._vth[wl].reshape(1, -1)
+    def page_read_batch(self, wls: List[WordlineKey], which: str = "lsb", *,
+                        backend=None) -> jnp.ndarray:
+        """Standard (default-reference) read of a batch of pages in one
+        fused sense call -> (N, words) packed."""
+        assert wls, "empty wordline batch"
         v0, v1, v2 = self.chip.vref_default
-        die = self._die_of_plane(wl[0])
         if which == "lsb":
-            out = kops.mlc_sense(vth, [v1, 0, 0, 0], kind="lsb")
-            us, uj = self.timing.read_latency_us("and"), self.energy.read_energy_uj_kb("and")
+            plan, op = ReadPlan("page_lsb", "lsb", (v1,), 1), "and"
         else:
-            out = kops.mlc_sense(vth, [v0, v2, 0, 0], kind="msb")
-            us, uj = self.timing.read_latency_us("or"), self.energy.read_energy_uj_kb("or")
-        self.ledger.add_die(die, us, uj * self.config.page_kb)
+            plan, op = ReadPlan("page_msb", "msb", (v0, v2), 2), "or"
+        us = self.timing.read_latency_us(op)
+        uj = self.energy.read_energy_uj_kb(op) * self.config.page_kb
+        for wl in wls:
+            self.ledger.add_die(self._die_of_plane(wl[0]), us, uj)
+        stack = jnp.stack([self._vth[wl] for wl in wls])
+        return (backend or self._default_backend).sense(stack, plan)
+
+    def page_read(self, wl: WordlineKey, which: str = "lsb",
+                  packed: bool = True, *, backend=None) -> jnp.ndarray:
+        """Standard (default-reference) page read."""
+        out = self.page_read_batch([wl], which, backend=backend)
         return out[0] if packed else kops.unpack_bits(out)[0]
 
     def copyback_align(self, src_a: WordlineKey, src_b: WordlineKey,
                        dst: WordlineKey, which_a: str = "lsb",
-                       which_b: str = "lsb") -> None:
+                       which_b: str = "lsb", *, backend=None) -> None:
         """Realign two scattered operands onto one shared wordline (Fig 9e).
 
         Uses the on-die cache register (no external transfer): two page reads
         + one shared-page copyback program.
         """
-        a = self.page_read(src_a, which_a, packed=False)
-        b = self.page_read(src_b, which_b, packed=False)
+        a = self.page_read(src_a, which_a, packed=False, backend=backend)
+        b = self.page_read(src_b, which_b, packed=False, backend=backend)
         self.program_shared(dst, a, b)
 
     def erase_block(self, plane: int, block: int) -> None:
@@ -147,7 +164,8 @@ class FlashDevice:
             self._operands.pop(wl, None)
         # block erase ~ 3.5 ms, energy ~ 2x page program
         self.ledger.add_die(self._die_of_plane(plane), 3500.0,
-                            2 * self.energy.e_prog_uj_kb * self.config.page_kb)
+                            2 * self.energy.e_prog_uj_kb * self.config.page_kb,
+                            category="erase")
 
     def dma_to_controller(self, wl: WordlineKey) -> None:
         """Account a page transfer NAND -> controller on the wordline's channel."""

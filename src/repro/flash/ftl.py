@@ -7,9 +7,12 @@ as a read with a per-op SET_FEATURE offset set.  This module provides:
 - wear-levelled block allocation (least-P/E free block per plane),
 - striped bit-vector placement across all planes (the §6 layout),
 - aligned operand-pair writes (A -> LSB page, B -> MSB page, same wordline),
-- runtime copyback realignment for scattered operands,
-- vector-level MCFlash compute (op over two named vectors) and chained
-  reductions with controller-side combining of per-pair partials.
+- runtime copyback realignment for scattered operands.
+
+Vector-level *compute* lives in :class:`repro.api.ComputeSession`; the
+historical ``mcflash_compute`` / ``mcflash_chain`` entry points remain as
+thin shims that forward to a session bound to this FTL, so existing callers
+keep working while new code talks to the session layer directly.
 """
 from __future__ import annotations
 
@@ -19,7 +22,6 @@ from typing import Dict, List, Tuple
 import jax.numpy as jnp
 
 from repro.flash.device import FlashDevice, WordlineKey
-from repro.kernels import ops as kops
 
 
 @dataclasses.dataclass
@@ -33,11 +35,22 @@ class VectorMeta:
 class FTL:
     def __init__(self, device: FlashDevice):
         self.device = device
+        if getattr(device, "ftl", None) is None:
+            device.ftl = self          # first FTL owns the device's allocator
         self.cfg = device.config
         self._next_wl: Dict[int, Tuple[int, int]] = {}   # plane -> (block, wl)
         self._wear: Dict[Tuple[int, int], int] = {}
         self.vectors: Dict[str, VectorMeta] = {}
         self._pair_of: Dict[str, str] = {}
+        self._session = None
+
+    @property
+    def session(self):
+        """Lazily-created :class:`repro.api.ComputeSession` bound to this FTL."""
+        if self._session is None:
+            from repro.api.session import ComputeSession
+            self._session = ComputeSession(ftl=self)
+        return self._session
 
     # -- allocation ----------------------------------------------------------
     def allocate_wordline(self, plane: int) -> WordlineKey:
@@ -50,6 +63,19 @@ class FTL:
         return key
 
     # -- placement -----------------------------------------------------------
+    @staticmethod
+    def derived_not_name(name: str) -> str:
+        """Name of the NOT-ready derived placement the session may cache."""
+        return f"__not__{name}"
+
+    def _invalidate(self, name: str) -> None:
+        """Rewriting a vector drops its pairing (both directions) and any
+        derived placements built from its old contents."""
+        partner = self._pair_of.pop(name, None)
+        if partner is not None and self._pair_of.get(partner) == name:
+            del self._pair_of[partner]
+        self.vectors.pop(self.derived_not_name(name), None)
+
     def _paginate(self, bits: jnp.ndarray) -> List[jnp.ndarray]:
         pb = self.cfg.page_bits
         n = int(bits.shape[0])
@@ -64,6 +90,8 @@ class FTL:
         pages_a = self._paginate(bits_a)
         pages_b = self._paginate(bits_b)
         assert len(pages_a) == len(pages_b), "aligned operands must match in size"
+        self._invalidate(name_a)
+        self._invalidate(name_b)
         placement: List[WordlineKey] = []
         for i, (pa, pb_) in enumerate(zip(pages_a, pages_b)):
             plane = i % self.cfg.planes
@@ -78,6 +106,7 @@ class FTL:
     def write_scattered(self, name: str, bits: jnp.ndarray, role: str = "lsb") -> None:
         """Write a single vector without a co-located partner (needs
         realignment before MCFlash compute) — stored with all-zero co-page."""
+        self._invalidate(name)
         pages = self._paginate(bits)
         placement = []
         for i, p in enumerate(pages):
@@ -96,6 +125,8 @@ class FTL:
         the name of the merged pair (A becomes LSB, B becomes MSB)."""
         ma, mb = self.vectors[name_a], self.vectors[name_b]
         assert len(ma.pages) == len(mb.pages)
+        self._invalidate(name_a)
+        self._invalidate(name_b)
         placement = []
         for wa, wb in zip(ma.pages, mb.pages):
             dst = self.allocate_wordline(wa[0])
@@ -107,37 +138,34 @@ class FTL:
         self._pair_of[name_b] = name_a
         return name_a
 
-    # -- compute ---------------------------------------------------------------
+    # -- compute (deprecation shims over the session layer) -------------------
+    def compute(self, op: str, name_a: str, name_b: str | None = None,
+                to_host: bool = True) -> jnp.ndarray:
+        """In-flash `op` over registered vectors -> packed result vector.
+
+        Forwards to :class:`repro.api.ComputeSession`; prefer building
+        expressions on session handles directly.
+        """
+        sess = self.session
+        if name_b is None:
+            assert op == "not", f"op {op!r} needs two operands"
+            expr = ~sess.vector(name_a)
+        else:
+            expr = sess.vector(name_a)._binary(op, sess.vector(name_b))
+        # Historical contract: truncated to whole words of the vector length
+        # (materialize returns page-padded words with the tail masked).
+        return sess.materialize(expr, to_host=to_host)[: expr.n_bits // 32]
+
     def mcflash_compute(self, op: str, name_a: str, name_b: str,
                         to_host: bool = True) -> jnp.ndarray:
-        """In-flash `op` over an aligned pair -> packed result vector."""
-        ma = self.vectors[name_a]
-        if self._pair_of.get(name_a) != name_b:
-            self.align(name_a, name_b)
-            ma = self.vectors[name_a]
-        outs = []
-        for i, wl in enumerate(ma.pages):
-            switch = i == 0  # one SET_FEATURE per op batch
-            outs.append(self.device.mcflash_read(wl, op, packed=True, switch_op=switch))
-            self.device.dma_to_controller(wl)
-        if to_host:
-            self.device.ext_to_host(len(ma.pages) * self.cfg.page_bytes // 8)
-        packed = jnp.stack(outs)
-        return packed.reshape(-1)[: ma.n_bits // 32]
+        """Deprecated alias of :meth:`compute` (kept for existing callers)."""
+        return self.compute(op, name_a, name_b, to_host=to_host)
 
     def mcflash_chain(self, op: str, pair_names: List[Tuple[str, str]],
                       to_host: bool = True) -> jnp.ndarray:
-        """k-operand chain (op in and/or/xor): in-flash op per aligned pair,
-        controller combines partials with the packed bitwise kernel (no host
-        round-trips)."""
-        assert op in ("and", "or", "xor"), "chains are associative ops only"
-        partials = [self.mcflash_compute(op, a, b, to_host=False)
-                    for a, b in pair_names]
-        if len(partials) == 1:
-            res = partials[0]
-        else:
-            stack = jnp.stack(partials).reshape(len(partials), 1, -1)
-            res = kops.bitwise_reduce(stack, op=op).reshape(-1)
-        if to_host:
-            self.device.ext_to_host(res.shape[-1] * 4)
-        return res
+        """k-operand chain (op in and/or/xor): forwards to the session layer,
+        which senses each aligned pair in-flash and fuses all partials into a
+        single controller-side ``bitwise_reduce``."""
+        sess = self.session
+        expr = sess.chain(op, [n for pair in pair_names for n in pair])
+        return sess.materialize(expr, to_host=to_host)[: expr.n_bits // 32]

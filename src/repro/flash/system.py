@@ -121,6 +121,15 @@ class Workload:
     def operand_bits(self) -> int:
         return self.operand_bits_per_item * self.items
 
+    def run_functional(self, **kwargs) -> dict:
+        """Execute one scaled-down wave of this workload through the
+        :class:`repro.api.ComputeSession` layer (program operands, in-flash
+        chain, controller combine), verifying against a host oracle.
+        Forwards to :func:`repro.api.workloads.run_workload`."""
+        from repro.api.workloads import run_workload   # deferred: api layers above
+
+        return run_workload(self, **kwargs)
+
 
 def image_segmentation(images: int = 10_000) -> Workload:
     """YUV colour recognition (§6.2): per class, AND across Y/U/V planes.

@@ -69,6 +69,9 @@ def popcount_rows(words: jnp.ndarray, *, interpret: bool | None = None) -> jnp.n
     if interpret is None:
         interpret = _default_interpret()
     padded, r = pad_rows(words)
+    pad_w = (-padded.shape[1]) % _pop.COL_TILE      # zero words count nothing
+    if pad_w:
+        padded = jnp.pad(padded, ((0, 0), (0, pad_w)))
     return _pop.popcount_rows(padded, interpret=interpret)[:r]
 
 

@@ -23,9 +23,7 @@ per-chip, matching the per-chip roofline denominators.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from functools import lru_cache
 
 # TPU v5e hardware constants (assignment-specified).
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
@@ -431,6 +429,8 @@ def analyze_text(hlo_text: str) -> Cost:
 
 def analyze(compiled) -> Roofline:
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):       # older jaxlib: list of per-module dicts
+        ca = ca[0] if ca else {}
     cost = analyze_text(compiled.as_text())
     return Roofline(
         flops=cost.flops,

@@ -1,0 +1,119 @@
+"""`hypothesis` compatibility layer.
+
+When the real library is installed it is re-exported untouched.  When it is
+missing (minimal CI images, the CPU-only dev container) a tiny deterministic
+sampler stands in so the property tests still execute with seeded random
+examples instead of failing at collection.  The shim intentionally supports
+only the strategy surface this repo uses: ``integers``, ``floats``, ``lists``,
+``tuples`` and ``sampled_from``.
+
+The fallback draws ``min(max_examples, REPRO_COMPAT_MAX_EXAMPLES)`` examples
+per test (default 5) from an RNG seeded by the test name, so runs are
+reproducible and reasonably fast; it is a smoke-level substitute, not a
+search-based one — install ``hypothesis`` for real shrinking/coverage.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # pragma: no cover - exercised only without hypothesis
+    import functools
+    import inspect
+    import os
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    _FALLBACK_EXAMPLES = int(os.environ.get("REPRO_COMPAT_MAX_EXAMPLES", "5"))
+
+    class _Strategy:
+        def example(self, rng: np.random.Generator):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = int(lo), int(hi)
+
+        def example(self, rng):
+            return int(rng.integers(self.lo, self.hi, endpoint=True, dtype=np.uint64)
+                       if self.lo >= 0 else
+                       rng.integers(self.lo, self.hi, endpoint=True))
+
+    class _Floats(_Strategy):
+        def __init__(self, lo: float, hi: float):
+            self.lo, self.hi = float(lo), float(hi)
+
+        def example(self, rng):
+            return float(rng.uniform(self.lo, self.hi))
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def example(self, rng):
+            return self.elements[int(rng.integers(0, len(self.elements)))]
+
+    class _Lists(_Strategy):
+        def __init__(self, elem: _Strategy, min_size: int = 0, max_size: int = 8):
+            self.elem, self.min_size, self.max_size = elem, min_size, max_size
+
+        def example(self, rng):
+            n = int(rng.integers(self.min_size, self.max_size, endpoint=True))
+            return [self.elem.example(rng) for _ in range(n)]
+
+    class _Tuples(_Strategy):
+        def __init__(self, *elems: _Strategy):
+            self.elems = elems
+
+        def example(self, rng):
+            return tuple(e.example(rng) for e in self.elems)
+
+    class _StrategiesModule:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Integers:
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def floats(min_value: float, max_value: float) -> _Floats:
+            return _Floats(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(elements) -> _SampledFrom:
+            return _SampledFrom(elements)
+
+        @staticmethod
+        def lists(elements: _Strategy, min_size: int = 0, max_size: int = 8) -> _Lists:
+            return _Lists(elements, min_size, max_size)
+
+        @staticmethod
+        def tuples(*elements: _Strategy) -> _Tuples:
+            return _Tuples(*elements)
+
+    st = _StrategiesModule()
+
+    def given(*strategies):
+        def decorate(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = min(getattr(wrapper, "_max_examples", _FALLBACK_EXAMPLES),
+                        _FALLBACK_EXAMPLES)
+                rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(max(n, 1)):
+                    fn(*args, *(s.example(rng) for s in strategies), **kwargs)
+            # Hide the wrapped signature: the strategy-filled parameters must
+            # not look like pytest fixtures.
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+        return decorate
+
+    def settings(max_examples: int = 10, **_ignored):
+        def decorate(fn):
+            fn._max_examples = max_examples
+            return fn
+        return decorate

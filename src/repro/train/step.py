@@ -8,7 +8,6 @@ without blowing activation memory.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -17,7 +16,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeCfg
 from repro.models import lm
-from repro.models.specs import abstract_tree, partition_specs_tree, shardings_tree
+from repro.models.specs import abstract_tree, shardings_tree
 from repro.optim import adamw
 from repro.parallel import sharding as shd
 

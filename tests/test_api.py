@@ -1,0 +1,412 @@
+"""Compute-session layer: backend parity, plan caching, fusion, shims."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ComputeSession, PallasBackend, PlanCache, SimBackend, run_op
+from repro.api.graph import Leaf, Op, simplify
+from repro.core import encoding, mcflash, vth_model
+from repro.flash.device import FlashDevice, Ledger
+from repro.flash.ftl import FTL
+from repro.flash.geometry import SSDConfig
+from repro.kernels import ops as kops
+
+SMALL = SSDConfig(page_kb=1)           # 8192-bit pages keep interpret mode fast
+
+
+def _session(backend, seed=0, **kw):
+    return ComputeSession(config=SMALL, backend=backend, seed=seed, **kw)
+
+
+def _operands(rng, n):
+    return ((rng.random(n) < 0.5).astype(np.uint8),
+            (rng.random(n) < 0.5).astype(np.uint8))
+
+
+def _expr(sess, op, a, b):
+    if op == "not":
+        return ~sess.vector("n")
+    return {"and": a.__and__, "or": a.__or__, "xor": a.__xor__,
+            "xnor": a.xnor, "nand": a.nand, "nor": a.nor}[op](b)
+
+
+@pytest.mark.parametrize("backend", ["sim", "pallas"])
+@pytest.mark.parametrize("op", encoding.ALL_OPS)
+def test_all_table1_ops_bit_exact_per_backend(backend, op, rng):
+    """Each backend runs every Table-1 op bit-exact vs the logical oracle."""
+    sess = _session(backend)
+    n = sess.device.config.page_bits
+    a_bits, b_bits = _operands(rng, n)
+    a, b = sess.write_pair("a", a_bits, "b", b_bits)
+    sess.write("n", b_bits, role="msb")
+    got = np.asarray(sess.materialize(_expr(sess, op, a, b), unpacked=True))
+    if op == "not":
+        want = np.asarray(encoding.logical_op("not", jnp.asarray(b_bits)))
+    else:
+        want = np.asarray(encoding.logical_op(op, jnp.asarray(a_bits),
+                                              jnp.asarray(b_bits)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_backends_agree_word_for_word(rng):
+    """Sim and Pallas backends produce identical packed words on all ops."""
+    n = SMALL.page_bits
+    a_bits, b_bits = _operands(rng, n)
+    results = {}
+    for backend in ("sim", "pallas"):
+        sess = _session(backend, seed=3)
+        a, b = sess.write_pair("a", a_bits, "b", b_bits)
+        sess.write("n", b_bits, role="msb")
+        results[backend] = [np.asarray(sess.materialize(_expr(sess, op, a, b)))
+                            for op in encoding.ALL_OPS]
+    for op, sim_words, pallas_words in zip(encoding.ALL_OPS, *results.values()):
+        np.testing.assert_array_equal(sim_words, pallas_words, err_msg=op)
+
+
+def test_plan_cache_replans_at_most_once_per_op_chip(rng):
+    """Repeated materializations never re-plan a cached (op, chip) pair."""
+    sess = _session("pallas")
+    n = sess.device.config.page_bits
+    a_bits, b_bits = _operands(rng, n)
+    a, b = sess.write_pair("a", a_bits, "b", b_bits)
+    for _ in range(4):
+        sess.materialize(a & b)
+        sess.materialize(a ^ b)
+    assert sess.plans.misses_for("and", sess.chip) == 1
+    assert sess.plans.misses_for("xor", sess.chip) == 1
+    assert sess.plans.stats()["misses"] == 2
+    assert sess.plans.hits >= 6
+
+
+def test_plan_cache_keyed_per_chip():
+    cache = PlanCache()
+    c1 = vth_model.get_chip_model("MT29F1T08EELEEJ4")
+    c2 = vth_model.get_chip_model("MT29F256G08EBHAFJ4")
+    p1 = cache.get("and", c1)
+    assert cache.get("and", c1) is p1
+    cache.get("and", c2)
+    assert cache.stats() == {"hits": 1, "misses": 2, "entries": 2}
+
+
+def test_chain_fuses_into_single_reduce(rng):
+    """A 6-operand chain = 3 in-flash senses + ONE controller combine."""
+    sess = _session("pallas")
+    n = sess.device.config.page_bits
+    bits = [(rng.random(n) < 0.5).astype(np.uint8) for _ in range(6)]
+    vecs = []
+    for i in range(0, 6, 2):
+        a, b = sess.write_pair(f"v{i}", bits[i], f"v{i+1}", bits[i + 1])
+        vecs += [a, b]
+    expr = vecs[0] & vecs[1] & vecs[2] & vecs[3] & vecs[4] & vecs[5]
+    senses0, combines0 = sess.in_flash_senses, sess.fused_reduce_calls
+    got = np.asarray(sess.materialize(expr, unpacked=True))
+    np.testing.assert_array_equal(got, np.bitwise_and.reduce(bits))
+    assert sess.in_flash_senses - senses0 == 3
+    assert sess.fused_reduce_calls - combines0 == 1
+
+
+def test_odd_chain_and_shared_subexpression(rng):
+    sess = _session("pallas")
+    n = sess.device.config.page_bits
+    bits = [(rng.random(n) < 0.5).astype(np.uint8) for _ in range(3)]
+    a, b = sess.write_pair("a", bits[0], "b", bits[1])
+    c = sess.write("c", bits[2])
+    got = np.asarray(sess.materialize(a | b | c, unpacked=True))
+    np.testing.assert_array_equal(got, bits[0] | bits[1] | bits[2])
+    # shared subexpression: (a&b) appears twice, evaluated once per materialize
+    shared = a & b
+    expr = (shared ^ c) ^ shared
+    got = np.asarray(sess.materialize(expr, unpacked=True))
+    np.testing.assert_array_equal(got, bits[2])  # x ^ c ^ x == c
+
+
+def test_graph_simplify_rewrites():
+    a, b, c = Leaf("a"), Leaf("b"), Leaf("c")
+    # chained same-op flattens into one k-ary node
+    n = simplify(Op("and", (Op("and", (a, b)), c)))
+    assert n == Op("and", (a, b, c))
+    # double negation cancels
+    assert simplify(Op("not", (Op("not", (a,)),))) == a
+    # ~(a & b) becomes an inverse-read NAND node
+    assert simplify(Op("not", (Op("and", (a, b)),))) == Op("nand", (a, b))
+    # ~(a ^ b) becomes XNOR
+    assert simplify(Op("not", (Op("xor", (a, b)),))) == Op("xnor", (a, b))
+
+
+def test_simplify_handles_long_chains_and_shared_nodes():
+    """Left-deep 600-operand chains flatten without recursion limits, and
+    shared subexpressions canonicalise once."""
+    leaves = [Leaf(f"v{i}") for i in range(600)]
+    expr = leaves[0]
+    for l in leaves[1:]:
+        expr = Op("and", (expr, l))
+    flat = simplify(expr)
+    assert flat == Op("and", tuple(leaves))
+    # ~(600-chain) folds into one k-ary NAND
+    assert simplify(Op("not", (expr,))) == Op("nand", tuple(leaves))
+
+
+def test_latest_session_drives_ftl_shims(rng):
+    """A second session wrapping the same FTL takes over the compute shims
+    (consistent with it installing its backend on the device)."""
+    s1 = _session("pallas")
+    n = s1.device.config.page_bits
+    a_bits, b_bits = _operands(rng, n)
+    s1.write_pair("a", a_bits, "b", b_bits)
+    assert s1.ftl.session is s1
+    s2 = ComputeSession(ftl=s1.ftl, backend="sim")
+    assert s1.ftl.session is s2
+    assert s1.device._default_backend.name == "sim"
+    res = s1.ftl.mcflash_compute("and", "a", "b", to_host=False)
+    np.testing.assert_array_equal(
+        np.asarray(kops.unpack_bits(res.reshape(1, -1))[0]), a_bits & b_bits)
+
+
+def test_scattered_operands_realign_on_demand(rng):
+    """Ops over non-aligned vectors trigger copyback realignment, then work."""
+    sess = _session("pallas")
+    n = sess.device.config.page_bits
+    a_bits, b_bits = _operands(rng, n)
+    a = sess.write("a", a_bits)
+    b = sess.write("b", b_bits)
+    got = np.asarray(sess.materialize(a ^ b, unpacked=True))
+    np.testing.assert_array_equal(got, a_bits ^ b_bits)
+    assert sess.ledger.category_us.get("program", 0) > 0   # copyback accounted
+
+
+def test_popcount_through_session(rng):
+    sess = _session("pallas")
+    n = sess.device.config.page_bits
+    a_bits, b_bits = _operands(rng, n)
+    a, b = sess.write_pair("a", a_bits, "b", b_bits)
+    assert (a & b).popcount() == int(np.sum(a_bits & b_bits))
+
+
+def test_multi_page_vectors_batch_across_planes(rng):
+    """Vectors striped over several planes sense in one batched call."""
+    sess = _session("pallas")
+    n = 3 * sess.device.config.page_bits
+    a_bits, b_bits = _operands(rng, n)
+    a, b = sess.write_pair("a", a_bits, "b", b_bits)
+    got = np.asarray(sess.materialize(a & b, unpacked=True))
+    np.testing.assert_array_equal(got, a_bits & b_bits)
+    assert sess.in_flash_senses == 1                      # one batch, 3 pages
+    planes = {wl[0] for wl in sess.ftl.vectors["a"].pages}
+    assert len(planes) == 3
+
+
+def test_unified_ledger_exposed_from_old_location():
+    """`from repro.flash.device import Ledger` keeps working (shim)."""
+    from repro.api.ledger import Ledger as ApiLedger
+    assert Ledger is ApiLedger
+    led = Ledger()
+    led.add_die(0, 10.0, 1.0)
+    led.add_die(0, 5.0, category="program")
+    assert led.makespan_us == 15.0
+    assert led.summary()["category_us"] == {"sense": 10.0, "program": 5.0}
+
+
+def test_mcflash_op_shim_matches_direct_plan_execution(rng):
+    """Deprecated core entry point forwards through the api plan cache."""
+    chip = vth_model.get_chip_model()
+    import jax
+    key = jax.random.PRNGKey(0)
+    lsb = jax.random.bernoulli(key, 0.5, (4096,)).astype(jnp.uint8)
+    msb = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5, (4096,)).astype(jnp.uint8)
+    vth, _ = vth_model.program_page(jax.random.fold_in(key, 2), lsb, msb, chip)
+    for op in ("and", "or", "xnor", "nand"):
+        got = mcflash.mcflash_op(op, vth, chip)
+        want = mcflash.execute_plan(mcflash.plan_op(op, chip), vth)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        # packed api path agrees too
+        packed = run_op(op, vth.reshape(1, -1), chip, backend="sim")
+        np.testing.assert_array_equal(
+            np.asarray(kops.unpack_bits(packed)[0]), np.asarray(want))
+
+
+def test_ftl_compute_shims_match_session_layer(rng):
+    """FTL.mcflash_compute / mcflash_chain forward to the session and stay
+    bit-exact with the historical outputs."""
+    dev = FlashDevice(config=SMALL, seed=7)
+    ftl = FTL(dev)
+    n = SMALL.page_bits
+    vecs = {k: (rng.random(n) < 0.5).astype(np.uint8) for k in "abcd"}
+    ftl.write_pair_aligned("a", jnp.asarray(vecs["a"]), "b", jnp.asarray(vecs["b"]))
+    ftl.write_pair_aligned("c", jnp.asarray(vecs["c"]), "d", jnp.asarray(vecs["d"]))
+    res = ftl.mcflash_compute("xnor", "a", "b", to_host=False)
+    want = 1 - (vecs["a"] ^ vecs["b"])
+    np.testing.assert_array_equal(
+        np.asarray(kops.unpack_bits(res.reshape(1, -1))[0]), want)
+    res = ftl.mcflash_chain("and", [("a", "b"), ("c", "d")])
+    want = vecs["a"] & vecs["b"] & vecs["c"] & vecs["d"]
+    np.testing.assert_array_equal(
+        np.asarray(kops.unpack_bits(res.reshape(1, -1))[0]), want)
+    # the shim went through the session: plans cached on the shared device cache
+    assert ftl.session.plans is dev.plans
+    assert dev.plans.misses_for("and", dev.chip) == 1
+
+
+def test_run_workload_functional(rng):
+    from repro.api.workloads import run_workload
+    from repro.flash.system import bitmap_index
+    out = run_workload(bitmap_index(1), session=_session("pallas"),
+                       n_bits=SMALL.page_bits)
+    assert out["measured"]["commands"] > 0
+    assert out["projection"]["speedup_vs"]["osc"] > 2.0
+    assert out["stats"]["in_flash_senses"] == 15          # 30 operands -> 15 senses
+
+
+def test_backend_rejects_unknown_name():
+    with pytest.raises(ValueError):
+        ComputeSession(config=SMALL, backend="cuda")
+
+
+def test_ftl_shim_uses_the_wrapping_session_backend(rng):
+    """FTL.mcflash_compute after ComputeSession(backend='sim') must run on
+    that session, not a hidden second pallas-backed one."""
+    sess = _session("sim")
+    n = sess.device.config.page_bits
+    a_bits, b_bits = _operands(rng, n)
+    sess.write_pair("a", a_bits, "b", b_bits)
+    assert sess.ftl.session is sess
+    res = sess.ftl.mcflash_compute("and", "a", "b", to_host=False)
+    np.testing.assert_array_equal(
+        np.asarray(kops.unpack_bits(res.reshape(1, -1))[0]), a_bits & b_bits)
+    assert sess.device._default_backend.name == "sim"
+
+
+def test_session_on_used_device_reuses_its_ftl(rng):
+    """ComputeSession(device=...) must not restart the wordline allocator and
+    overwrite pages an earlier FTL programmed."""
+    dev = FlashDevice(config=SMALL, seed=13)
+    ftl = FTL(dev)
+    n = SMALL.page_bits
+    a_bits, b_bits = _operands(rng, n)
+    ftl.write_pair_aligned("a", jnp.asarray(a_bits), "b", jnp.asarray(b_bits))
+    sess = ComputeSession(device=dev)
+    assert sess.ftl is ftl
+    c_bits, d_bits = _operands(rng, n)
+    sess.write_pair("c", c_bits, "d", d_bits)
+    got = np.asarray(sess.materialize(sess["a"] & sess["b"], unpacked=True))
+    np.testing.assert_array_equal(got, a_bits & b_bits)   # 'a'/'b' intact
+
+
+def test_session_rejects_config_with_existing_device():
+    """Device-construction kwargs must not be silently ignored."""
+    dev = FlashDevice(config=SMALL, seed=4)
+    with pytest.raises(ValueError):
+        ComputeSession(device=dev, config=SMALL)
+    with pytest.raises(ValueError):
+        ComputeSession(ftl=FTL(dev), seed=7)
+    assert ComputeSession(device=dev).device is dev        # plain wrap still fine
+
+
+def test_size_mismatch_and_cross_session_rejected(rng):
+    s1 = _session("pallas")
+    s2 = _session("pallas", seed=1)
+    n = SMALL.page_bits
+    a = s1.write("a", (rng.random(n) < 0.5).astype(np.uint8))
+    b = s1.write("b", (rng.random(2 * n) < 0.5).astype(np.uint8))
+    c = s2.write("c", (rng.random(n) < 0.5).astype(np.uint8))
+    with pytest.raises(ValueError):
+        _ = a & b
+    with pytest.raises(ValueError):
+        _ = a & c
+
+
+def test_overwrite_invalidates_stale_pairing(rng):
+    """Rewriting one operand of an aligned pair must not leave the partner's
+    reverse pairing pointing at the old shared wordlines."""
+    sess = _session("pallas")
+    n = sess.device.config.page_bits
+    a1, b_bits = _operands(rng, n)
+    a2 = (rng.random(n) < 0.5).astype(np.uint8)
+    sess.write_pair("a", a1, "b", b_bits)
+    sess.write("a", a2)                      # rewrite; 'b' must not stay paired
+    got = np.asarray(sess.materialize(sess["b"] & sess["a"], unpacked=True))
+    np.testing.assert_array_equal(got, a2 & b_bits)
+
+
+def test_rewrite_invalidates_derived_not_copy(rng):
+    """NOT results must track rewrites even through the FTL shim layer."""
+    dev = FlashDevice(config=SMALL, seed=11)
+    ftl = FTL(dev)
+    n = SMALL.page_bits
+    x1, x2 = _operands(rng, n)
+    ftl.write_scattered("x", jnp.asarray(x1))
+    got1 = kops.unpack_bits(ftl.compute("not", "x").reshape(1, -1))[0]
+    np.testing.assert_array_equal(np.asarray(got1), 1 - x1)
+    ftl.write_scattered("x", jnp.asarray(x2))
+    got2 = kops.unpack_bits(ftl.compute("not", "x").reshape(1, -1))[0]
+    np.testing.assert_array_equal(np.asarray(got2), 1 - x2)
+
+
+def test_named_methods_raise_on_non_bitvector(rng):
+    sess = _session("pallas")
+    n = sess.device.config.page_bits
+    a = sess.write("a", (rng.random(n) < 0.5).astype(np.uint8))
+    with pytest.raises(TypeError):
+        a.xnor(5)
+    with pytest.raises(TypeError):
+        _ = a & 5
+
+
+def test_session_chain_helper(rng):
+    sess = _session("pallas")
+    n = sess.device.config.page_bits
+    bits = [(rng.random(n) < 0.5).astype(np.uint8) for _ in range(4)]
+    sess.write_pair("a", bits[0], "b", bits[1])
+    sess.write_pair("c", bits[2], "d", bits[3])
+    got = np.asarray(sess.materialize(sess.chain("or", "abcd"), unpacked=True))
+    np.testing.assert_array_equal(got, np.bitwise_or.reduce(bits))
+    with pytest.raises(ValueError):
+        sess.chain("nand", "ab")
+    with pytest.raises(ValueError):
+        sess.chain("and", [])
+
+
+def test_partial_page_vectors_mask_padding(rng):
+    """Vectors shorter than a page work end-to-end: inverse-read ops must not
+    leak ones into the page-padding region (packed tail masked, popcount
+    exact, unpacked trimmed)."""
+    sess = _session("pallas")
+    for n in (100, 4128, SMALL.page_bits + 7):
+        a_bits, b_bits = _operands(rng, n)
+        a, b = sess.write_pair(f"a{n}", a_bits, f"b{n}", b_bits)
+        expr = ~(a & b)                               # inverse-read: pad -> 1s
+        got = np.asarray(sess.materialize(expr, unpacked=True))
+        np.testing.assert_array_equal(got, 1 - (a_bits & b_bits))
+        assert got.shape == (n,)
+        want_count = int(np.sum(1 - (a_bits & b_bits)))
+        assert expr.popcount() == want_count
+        packed = np.asarray(sess.materialize(expr))   # padded words, tail zeroed
+        assert int(kops.popcount_rows(jnp.asarray(packed).reshape(1, -1))[0]) == want_count
+
+
+def test_sim_session_never_enters_pallas(rng, monkeypatch):
+    """backend='sim' must stay on the pure-jnp path even for realignment
+    reads, odd-chain leftovers, and NOT-copy rewrites."""
+    import jax.experimental.pallas as pl
+
+    def _boom(*a, **kw):
+        raise AssertionError("Pallas kernel invoked on the sim backend")
+
+    monkeypatch.setattr(pl, "pallas_call", _boom)
+    sess = _session("sim")
+    n = sess.device.config.page_bits
+    bits = [(rng.random(n) < 0.5).astype(np.uint8) for _ in range(3)]
+    a = sess.write("a", bits[0])                      # scattered -> align path
+    b = sess.write("b", bits[1])
+    c = sess.write("c", bits[2])                      # odd-chain leftover read
+    got = np.asarray(sess.materialize(a & b & c, unpacked=True))
+    np.testing.assert_array_equal(got, bits[0] & bits[1] & bits[2])
+    got = np.asarray(sess.materialize(~a, unpacked=True))   # NOT-copy rewrite
+    np.testing.assert_array_equal(got, 1 - bits[0])
+    assert (a & b).popcount() == int(np.sum(bits[0] & bits[1]))
+
+
+def test_backend_instances_accepted():
+    sess = ComputeSession(config=SMALL, backend=SimBackend())
+    assert sess.backend.name == "sim"
+    sess = ComputeSession(config=SMALL, backend=PallasBackend(interpret=True))
+    assert sess.backend.name == "pallas"

@@ -1,6 +1,10 @@
 """Per-arch smoke tests: REDUCED config of the same family, one
 forward/train step on CPU, asserting output shapes + no NaNs (assignment
-requirement).  The FULL configs are exercised via the dry-run only."""
+requirement).  The FULL configs are exercised via the dry-run only.
+
+A representative fast subset of architectures runs by default; the rest
+(the compile-heavy families) sit behind ``-m slow``.
+"""
 import dataclasses
 
 import jax
@@ -12,6 +16,13 @@ from repro.models import lm
 from repro.models.specs import init_tree
 from repro.optim import adamw
 from repro.train.step import make_train_step
+
+# One family per architecture kind; the remaining configs are slow-marked.
+FAST_ARCHS = {"qwen3-1.7b", "mamba2-130m", "mixtral-8x7b", "granite-3-2b"}
+ARCH_PARAMS = [
+    pytest.param(a, marks=() if a in FAST_ARCHS else (pytest.mark.slow,))
+    for a in sorted(REGISTRY)
+]
 
 
 def reduced(cfg):
@@ -50,7 +61,7 @@ def smoke_batch(cfg, key, batch=2, seq=128):
     return {"tokens": jax.random.randint(key, (batch, seq), 1, cfg.vocab)}
 
 
-@pytest.mark.parametrize("arch", sorted(REGISTRY))
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_reduced_forward_loss_finite(arch):
     cfg = reduced(get_config(arch))
     key = jax.random.PRNGKey(0)
@@ -60,7 +71,7 @@ def test_reduced_forward_loss_finite(arch):
     assert bool(jnp.isfinite(loss)), (arch, loss)
 
 
-@pytest.mark.parametrize("arch", sorted(REGISTRY))
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_reduced_train_step_updates_params(arch):
     cfg = reduced(get_config(arch))
     key = jax.random.PRNGKey(1)
@@ -77,7 +88,7 @@ def test_reduced_train_step_updates_params(arch):
     assert moved, arch
 
 
-@pytest.mark.parametrize("arch", sorted(REGISTRY))
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_reduced_decode_step(arch):
     cfg = reduced(get_config(arch))
     key = jax.random.PRNGKey(2)

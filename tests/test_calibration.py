@@ -2,7 +2,7 @@
 the zero-RBER window centre and adapts to wear."""
 import pytest
 
-from repro.core import calibration, rber, vth_model
+from repro.core import calibration, vth_model
 
 
 @pytest.fixture(scope="module")

@@ -1,14 +1,18 @@
 """Flash device + FTL + timing/energy/system models (paper §5.5, §6)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.flash import (FTL, EnergyModel, FlashDevice, SystemModel,
+from repro.flash import (FTL, EnergyModel, FlashDevice,
                          TimingModel, bitmap_index, image_encryption,
                          image_segmentation, isc_time_us, mcflash_time_us,
                          osc_time_us, speedup_table)
+from repro.flash.geometry import SSDConfig
 from repro.kernels import ops as kops
+
+# Small pages keep the interpret-mode default run fast; the full 16 kB page
+# paths run behind `-m slow`.
+SMALL = SSDConfig(page_kb=1)
 
 
 def test_fig9_timeline_numbers_exact():
@@ -34,7 +38,7 @@ def test_xnor_energy_51pct_over_and():
 
 
 def test_device_mcflash_ops_bit_exact(rng):
-    dev = FlashDevice(seed=5)
+    dev = FlashDevice(config=SMALL, seed=5)
     n = dev.config.page_bits
     lsb = jnp.asarray((rng.random(n) < 0.5).astype(np.uint8))
     msb = jnp.asarray((rng.random(n) < 0.5).astype(np.uint8))
@@ -46,7 +50,7 @@ def test_device_mcflash_ops_bit_exact(rng):
 
 
 def test_device_ledger_accounts_time_and_energy():
-    dev = FlashDevice(seed=6)
+    dev = FlashDevice(config=SMALL, seed=6)
     n = dev.config.page_bits
     wl = (0, 0, 0)
     dev.program_shared(wl, jnp.zeros(n, jnp.uint8), jnp.ones(n, jnp.uint8))
@@ -57,7 +61,7 @@ def test_device_ledger_accounts_time_and_energy():
 
 
 def test_ftl_aligned_pair_and_chain(rng):
-    dev = FlashDevice(seed=7)
+    dev = FlashDevice(config=SMALL, seed=7)
     ftl = FTL(dev)
     n = dev.config.page_bits
     vecs = {name: (rng.random(n) < 0.5).astype(np.uint8)
@@ -71,7 +75,7 @@ def test_ftl_aligned_pair_and_chain(rng):
 
 
 def test_ftl_realignment_copyback(rng):
-    dev = FlashDevice(seed=8)
+    dev = FlashDevice(config=SMALL, seed=8)
     ftl = FTL(dev)
     n = dev.config.page_bits
     a = (rng.random(n) < 0.5).astype(np.uint8)
@@ -106,3 +110,17 @@ def test_bitmap_speedup_grows_with_chain_length():
     s1 = speedup_table(bitmap_index(1))["speedup_vs"]["isc"]
     s12 = speedup_table(bitmap_index(12))["speedup_vs"]["isc"]
     assert s12 > s1
+
+
+@pytest.mark.slow
+def test_device_mcflash_ops_bit_exact_full_page(rng):
+    """Full 16 kB wordline pages (the default SSDConfig geometry)."""
+    dev = FlashDevice(seed=5)
+    n = dev.config.page_bits
+    lsb = jnp.asarray((rng.random(n) < 0.5).astype(np.uint8))
+    msb = jnp.asarray((rng.random(n) < 0.5).astype(np.uint8))
+    wl = (0, 0, 0)
+    dev.program_shared(wl, lsb, msb)
+    for op in ("and", "or", "xnor", "xor", "nand", "nor"):
+        got = dev.mcflash_read(wl, op, packed=False)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(dev.expected(wl, op)))

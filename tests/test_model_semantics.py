@@ -1,7 +1,5 @@
 """Model-layer semantics: attention equivalences, decode==prefill, SSD/RG-LRU
 recurrence vs full-sequence forward."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -78,6 +76,7 @@ def _tiny_cfg(**kw):
     return ModelConfig(**base)
 
 
+@pytest.mark.slow
 def test_prefill_then_decode_matches_full_forward():
     """Decoding token-by-token after a prefill must reproduce the teacher-
     forced logits of the full forward pass (the serving-correctness
@@ -121,6 +120,7 @@ def test_decode_equals_prefill_logits_stepwise():
                                atol=0.15, rtol=0.05)  # bf16 accumulation slack
 
 
+@pytest.mark.slow
 def test_ssd_decode_matches_forward():
     """Recurrent single-step SSD == chunked full-sequence SSD."""
     cfg = _tiny_cfg(pattern=(BlockCfg("ssd", mlp="none"),),

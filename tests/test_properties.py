@@ -2,10 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from repro.testing.hypothesis_compat import given, settings, st
 
-from repro.core import encoding, mcflash, tlc, vth_model
+from repro.core import mcflash, tlc, vth_model
 from repro.kernels import ops as kops, ref
 from repro.launch import hlo_analysis as H
 from repro.parallel import sharding as shd

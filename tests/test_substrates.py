@@ -1,8 +1,6 @@
 """Substrate tests: fault-tolerant loop, checkpoints (incl. XOR-delta +
 elastic restore), data pipeline determinism, serving engine, compression,
 pipeline parallelism."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -94,6 +92,7 @@ def test_train_loop_loss_drops(tmp_path):
     assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1
 
 
+@pytest.mark.slow
 def test_train_loop_checkpoint_restart_resumes(tmp_path):
     """Kill at step 25 (preemption), restart, and verify seamless resume."""
     cfg = tiny_cfg()
@@ -188,12 +187,11 @@ def test_compressed_payload_is_int8():
 # ------------------------------ pipeline (PP) -------------------------------
 
 def test_pipeline_matches_sequential():
-    import os
     if jax.device_count() < 4:
         pytest.skip("needs 4 host devices (run under XLA_FLAGS)")
-    from jax.sharding import AxisType
+    from repro.launch.mesh import _make_mesh
     from repro.parallel.pipeline import pipeline_apply
-    mesh = jax.make_mesh((4,), ("pod",), axis_types=(AxisType.Auto,))
+    mesh = _make_mesh((4,), ("pod",))
     ws = jnp.stack([jnp.eye(8) * (i + 1) for i in range(4)])
     x = jnp.arange(16 * 8, dtype=jnp.float32).reshape(16, 8)
     y = pipeline_apply(lambda w, xm: xm @ w, ws, x, mesh=mesh, microbatches=4)

@@ -11,12 +11,17 @@ import pytest
 
 from repro.core import encoding, rber, vth_model
 from repro.flash import FTL, FlashDevice, TimingModel
+from repro.flash.geometry import SSDConfig
 from repro.kernels import ops as kops
+
+# Small pages keep the interpret-mode default run fast; full 16 kB pages run
+# behind `-m slow`.
+SMALL = SSDConfig(page_kb=1)
 
 
 def test_end_to_end_all_ops_bit_exact(rng):
     """Program -> shifted-read compute -> verify, for every two-operand op."""
-    dev = FlashDevice(seed=42)
+    dev = FlashDevice(config=SMALL, seed=42)
     n = dev.config.page_bits
     a = jnp.asarray((rng.random(n) < 0.5).astype(np.uint8))
     b = jnp.asarray((rng.random(n) < 0.5).astype(np.uint8))
@@ -31,7 +36,7 @@ def test_end_to_end_all_ops_bit_exact(rng):
 def test_repeated_reads_do_not_disturb_data(rng):
     """§5.1: multiple shifted reads on the same wordline stay bit-exact
     (reads are non-destructive)."""
-    dev = FlashDevice(seed=1)
+    dev = FlashDevice(config=SMALL, seed=1)
     n = dev.config.page_bits
     a = jnp.asarray((rng.random(n) < 0.5).astype(np.uint8))
     b = jnp.asarray((rng.random(n) < 0.5).astype(np.uint8))
@@ -54,7 +59,7 @@ def test_wear_increases_rber_through_full_stack():
 
 def test_ftl_vector_pipeline_end_to_end(rng):
     """Multi-page vectors striped across planes: chain + popcount offload."""
-    dev = FlashDevice(seed=9)
+    dev = FlashDevice(config=SMALL, seed=9)
     ftl = FTL(dev)
     n = 3 * dev.config.page_bits            # 3 pages, crosses planes
     vecs = {k: (rng.random(n) < 0.6).astype(np.uint8) for k in "abcd"}
@@ -72,7 +77,7 @@ def test_ftl_vector_pipeline_end_to_end(rng):
 
 
 def test_latency_accounting_matches_paper_model():
-    dev = FlashDevice(seed=2)
+    dev = FlashDevice(config=SMALL, seed=2)
     t = TimingModel()
     n = dev.config.page_bits
     dev.program_shared((0, 0, 0), jnp.zeros(n, jnp.uint8), jnp.ones(n, jnp.uint8))
@@ -83,7 +88,7 @@ def test_latency_accounting_matches_paper_model():
 
 
 def test_energy_scales_with_sensing_phases():
-    dev = FlashDevice(seed=3)
+    dev = FlashDevice(config=SMALL, seed=3)
     n = dev.config.page_bits
     dev.program_shared((0, 0, 0), jnp.zeros(n, jnp.uint8), jnp.ones(n, jnp.uint8))
     e0 = dev.ledger.energy_uj
@@ -93,3 +98,17 @@ def test_energy_scales_with_sensing_phases():
     dev.mcflash_read((0, 0, 0), "xnor")
     e_xnor = dev.ledger.energy_uj - e1
     assert e_xnor / e_and == pytest.approx(1.51, abs=0.02)
+
+
+@pytest.mark.slow
+def test_end_to_end_all_ops_bit_exact_full_page(rng):
+    """Program -> compute -> verify on full 16 kB pages (default geometry)."""
+    dev = FlashDevice(seed=42)
+    n = dev.config.page_bits
+    a = jnp.asarray((rng.random(n) < 0.5).astype(np.uint8))
+    b = jnp.asarray((rng.random(n) < 0.5).astype(np.uint8))
+    wl = (3, 7, 11)
+    dev.program_shared(wl, a, b)
+    for op in encoding.TWO_OPERAND_OPS:
+        got = dev.mcflash_read(wl, op, packed=False)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(dev.expected(wl, op)))
