@@ -1,7 +1,21 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing + CSV/JSON emission.
+
+Every ``emit`` both prints the historical ``name,us,derived`` CSV line and
+records the entry in-process; ``write_json`` merges the recorded entries into
+a ``BENCH_*.json`` file (keyed by op name, existing entries for other ops
+preserved) so the perf trajectory is machine-readable and trackable across
+PRs — the driver for the executor before/after numbers.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
+from typing import Dict, List
+
+_RESULTS: List[Dict] = []
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def timeit(fn, *args, iters: int = 3, warmup: int = 1, **kw) -> float:
@@ -19,3 +33,28 @@ def timeit(fn, *args, iters: int = 3, warmup: int = 1, **kw) -> float:
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.2f},{derived}")
+    _RESULTS.append({"op": name, "us": round(float(us_per_call), 2),
+                     "derived": derived})
+
+
+def write_json(filename: str) -> str:
+    """Merge the entries emitted so far into ``<repo>/<filename>`` (keyed by
+    op name) and clear the in-process buffer.  Returns the path written."""
+    global _RESULTS
+    path = filename if os.path.isabs(filename) else os.path.join(REPO_ROOT,
+                                                                 filename)
+    merged: Dict[str, Dict] = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                merged = {r["op"]: r for r in json.load(f).get("results", [])}
+        except (json.JSONDecodeError, KeyError, TypeError):
+            merged = {}
+    for r in _RESULTS:
+        merged[r["op"]] = r
+    with open(path, "w") as f:
+        json.dump({"results": sorted(merged.values(), key=lambda r: r["op"])},
+                  f, indent=1)
+        f.write("\n")
+    _RESULTS = []
+    return path

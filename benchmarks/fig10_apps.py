@@ -18,7 +18,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_json
 from repro.api import ComputeSession
 from repro.flash import (bitmap_index, image_encryption, image_segmentation,
                          speedup_table)
@@ -57,6 +57,7 @@ def main(quick: bool = True) -> None:
              f"nonaligned={avg['mcflash_nonaligned']:.2f}x;"
              f"functional_senses={senses};functional_ok=1")
         assert avg["osc"] > 2 and avg["isc"] > 1.2 and avg["parabit"] > 1.0
+    write_json("BENCH_apps.json")
 
 
 if __name__ == "__main__":

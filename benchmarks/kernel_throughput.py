@@ -1,27 +1,36 @@
 """Backend micro-benchmarks (interpret mode on CPU — correctness-shaped, the
 TPU numbers come from the §Roofline analysis of the lowered kernels).
 
-Times the three :class:`repro.api.Backend` primitives — fused sense+pack,
-packed multi-operand reduce, popcount — on both the Pallas backend and the
-pure-jnp sim backend, so backend overheads are directly comparable.
+Times the :class:`repro.api.Backend` primitives — fused sense+pack, packed
+multi-operand reduce, popcount, and the fused sense→reduce(→popcount)
+megakernels — on both the Pallas backend and the pure-jnp sim backend, plus
+the compiled-executor end-to-end path (16-operand chain materialize through
+the cached executable).  Results land in ``BENCH_kernels.json`` so the perf
+trajectory is tracked across PRs.
 """
 from __future__ import annotations
+
+import argparse
+import time
 
 import jax
 import numpy as np
 
-from benchmarks.common import emit, timeit
-from repro.api import PallasBackend, PlanCache, SimBackend
+from benchmarks.common import emit, timeit, write_json
+from repro.api import ComputeSession, PallasBackend, PlanCache, SimBackend
 from repro.core.vth_model import get_chip_model
+from repro.flash.geometry import SSDConfig
 
 
-def main(quick: bool = True) -> None:
+def _bench_backends(quick: bool) -> None:
     rng = np.random.default_rng(0)
     rows = 8 if quick else 64
     vth = np.asarray(rng.normal(2.0, 2.0, (rows, 131072)), np.float32)
     plans = PlanCache()
     chip = get_chip_model()
     stack = rng.integers(0, 2**32, (8, rows, 4096), dtype=np.uint64).astype(np.uint32)
+    vth_chain = np.asarray(rng.normal(2.0, 2.0, (8, rows, 131072)), np.float32)
+    mask = np.full((rows, 4096), 0xFFFFFFFF, np.uint32)
     words = stack[0]
 
     for backend in (PallasBackend(), SimBackend()):
@@ -36,9 +45,56 @@ def main(quick: bool = True) -> None:
         us = timeit(lambda: jax.block_until_ready(backend.popcount(words)))
         emit(f"kernel_{backend.name}_popcount", us,
              f"gbits_per_s={words.size * 32 / us / 1e3:.1f}")
+        # fused megakernels: 8-operand chain, sense epilogue -> reduce (-> count)
+        plan = plans.get("and", chip)
+        us = timeit(lambda: jax.block_until_ready(
+            backend.sense_reduce(vth_chain, plan, op="and")))
+        emit(f"kernel_{backend.name}_sense_reduce8", us,
+             f"megacells_per_s={vth_chain.size / us:.0f}")
+        us = timeit(lambda: jax.block_until_ready(
+            backend.sense_reduce_popcount(vth_chain, plan, mask, op="and")))
+        emit(f"kernel_{backend.name}_sense_reduce_popcount8", us,
+             f"megacells_per_s={vth_chain.size / us:.0f}")
     emit("kernel_plan_cache", 0.0,
          f"hits={plans.hits};misses={plans.misses}")
 
 
+def _bench_executor(quick: bool) -> None:
+    """End-to-end compiled-executor path: 16-operand AND chain materialize."""
+    rng = np.random.default_rng(1)
+    sess = ComputeSession(config=SSDConfig(page_kb=2 if quick else 16),
+                          backend="pallas")
+    n = sess.device.config.page_bits
+    vecs = []
+    for i in range(0, 16, 2):
+        a, b = sess.write_pair(f"k{i}", (rng.random(n) < 0.5).astype(np.uint8),
+                               f"k{i+1}", (rng.random(n) < 0.5).astype(np.uint8))
+        vecs += [a, b]
+    expr = sess.chain("and", vecs)
+    us = timeit(lambda: jax.block_until_ready(sess.materialize(expr)),
+                iters=5 if quick else 20)
+    stats = sess.stats()
+    emit("executor_chain16_materialize", us,
+         f"bits={n};sense_batches={stats['sense_batches']};"
+         f"megakernels={stats['megakernel_calls']};"
+         f"exec_cache_hits={stats['executor']['hits']};"
+         f"traces={stats['executor']['traces']}")
+    us = timeit(lambda: sess.popcount(expr), iters=5 if quick else 20)
+    emit("executor_chain16_popcount", us, f"bits={n}")
+
+
+def main(quick: bool = True) -> None:
+    t0 = time.perf_counter()
+    _bench_backends(quick)
+    _bench_executor(quick)
+    emit("kernel_throughput_total", (time.perf_counter() - t0) * 1e6,
+         f"quick={int(quick)}")
+    write_json("BENCH_kernels.json")
+
+
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", default=True,
+                    help="small shapes (default; CI smoke mode)")
+    ap.add_argument("--full", dest="quick", action="store_false")
+    main(quick=ap.parse_args().quick)

@@ -7,15 +7,19 @@ pure cache hits.
 """
 from __future__ import annotations
 
+import argparse
+import time
+
 import jax
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, timeit, write_json
 from repro.api import ComputeSession
 from repro.core import encoding
 
 
 def main(quick: bool = True) -> None:
+    t0 = time.perf_counter()
     sess = ComputeSession(backend="pallas", seed=0)
     pages = 2 if quick else 8
     n = pages * sess.device.config.page_bits
@@ -49,7 +53,17 @@ def main(quick: bool = True) -> None:
     emit("table1_plan_cache", 0.0,
          f"hits={stats['hits']};misses={stats['misses']};entries={stats['entries']}")
     assert stats["misses"] <= len(encoding.ALL_OPS), stats
+    ex = sess.stats()["executor"]
+    emit("table1_exec_cache", 0.0,
+         f"hits={ex['hits']};misses={ex['misses']};traces={ex['traces']}")
+    # repeat timings replayed cached executables: one trace per DAG shape
+    assert ex["traces"] == ex["misses"], ex
+    emit("table1_total", (time.perf_counter() - t0) * 1e6, f"quick={int(quick)}")
+    write_json("BENCH_kernels.json")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", default=True)
+    ap.add_argument("--full", dest="quick", action="store_false")
+    main(quick=ap.parse_args().quick)

@@ -12,7 +12,10 @@ Submodules:
 
 - ``session``    — :class:`ComputeSession` + the one-shot :func:`run_op`.
 - ``graph``      — lazy :class:`BitVector` op DAG + canonicalisation.
-- ``plan_cache`` — keyed Table-1 read-plan cache with hit/miss counters.
+- ``executor``   — compiled DAG executor: whole-graph sense batching, fused
+  sense→reduce megakernels, cached jitted executables.
+- ``plan_cache`` — keyed Table-1 read-plan / executable caches with hit/miss
+  counters.
 - ``backends``   — :class:`Backend` protocol, :class:`SimBackend` (jnp
   oracle), :class:`PallasBackend` (fused kernels).
 - ``ledger``     — the unified timing/energy :class:`Ledger`.
@@ -23,13 +26,15 @@ needed by ``repro.flash.device``); everything else resolves lazily to keep
 the ``core <- flash <- api`` layering cycle-free.
 """
 from repro.api.ledger import Ledger
-from repro.api.plan_cache import PlanCache
+from repro.api.plan_cache import ExecutableCache, PlanCache
 
 _LAZY = {
     "ComputeSession": "repro.api.session",
     "run_op": "repro.api.session",
     "BitVector": "repro.api.graph",
     "simplify": "repro.api.graph",
+    "Executor": "repro.api.executor",
+    "ExecPlan": "repro.api.executor",
     "Backend": "repro.api.backends",
     "SimBackend": "repro.api.backends",
     "PallasBackend": "repro.api.backends",
@@ -37,7 +42,7 @@ _LAZY = {
     "run_workload": "repro.api.workloads",
 }
 
-__all__ = ["Ledger", "PlanCache", *sorted(_LAZY)]
+__all__ = ["ExecutableCache", "Ledger", "PlanCache", *sorted(_LAZY)]
 
 
 def __getattr__(name: str):

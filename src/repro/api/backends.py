@@ -45,6 +45,18 @@ class Backend(Protocol):
         """(R, W) packed uint32 -> (R,) int32 bit counts."""
         ...
 
+    def sense_reduce(self, vth: jnp.ndarray, plan: ReadPlan, *, op: str,
+                     invert: bool = False) -> jnp.ndarray:
+        """Fused chain: (N, R, C) same-plan Vth operands -> (R, C//32)
+        packed op-reduction (sense epilogue feeds the reduce accumulator)."""
+        ...
+
+    def sense_reduce_popcount(self, vth: jnp.ndarray, plan: ReadPlan,
+                              mask: jnp.ndarray, *, op: str,
+                              invert: bool = False) -> jnp.ndarray:
+        """Fused chain + masked popcount: (N, R, C) Vth -> (R,) int32."""
+        ...
+
 
 class SimBackend:
     """Pure-jnp oracle backend (``repro.kernels.ref``)."""
@@ -60,6 +72,18 @@ class SimBackend:
 
     def popcount(self, words: jnp.ndarray) -> jnp.ndarray:
         return kernel_ref.popcount_rows(words)
+
+    def sense_reduce(self, vth: jnp.ndarray, plan: ReadPlan, *, op: str,
+                     invert: bool = False) -> jnp.ndarray:
+        return kernel_ref.sense_reduce(vth, _padded_refs(plan), plan.kind,
+                                       plan.uses_inverse, op, invert)
+
+    def sense_reduce_popcount(self, vth: jnp.ndarray, plan: ReadPlan,
+                              mask: jnp.ndarray, *, op: str,
+                              invert: bool = False) -> jnp.ndarray:
+        return kernel_ref.sense_reduce_popcount(vth, _padded_refs(plan), mask,
+                                                plan.kind, plan.uses_inverse,
+                                                op, invert)
 
 
 class PallasBackend:
@@ -79,6 +103,18 @@ class PallasBackend:
 
     def popcount(self, words: jnp.ndarray) -> jnp.ndarray:
         return kops.popcount_rows(words, interpret=self.interpret)
+
+    def sense_reduce(self, vth: jnp.ndarray, plan: ReadPlan, *, op: str,
+                     invert: bool = False) -> jnp.ndarray:
+        return kops.sense_reduce_plan(vth, plan, op=op, invert=invert,
+                                      interpret=self.interpret)
+
+    def sense_reduce_popcount(self, vth: jnp.ndarray, plan: ReadPlan,
+                              mask: jnp.ndarray, *, op: str,
+                              invert: bool = False) -> jnp.ndarray:
+        return kops.sense_reduce_popcount_plan(vth, plan, mask, op=op,
+                                               invert=invert,
+                                               interpret=self.interpret)
 
 
 _NAMED = {"sim": SimBackend, "pallas": PallasBackend}

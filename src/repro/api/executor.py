@@ -1,0 +1,382 @@
+"""Compiled DAG executor: whole-graph sense batching + cached executables.
+
+The session layer used to evaluate the canonical op DAG eagerly — one
+backend sense call per operand pair, a controller combine per node, and
+per-page Python accounting loops — so a 16-operand query paid ~10 kernel
+dispatches plus host round-trips.  This module lowers a canonical
+(:func:`repro.api.graph.simplify`-ed) DAG into a static :class:`ExecPlan`
+instead:
+
+1. **Lowering** walks the DAG once, resolving placement (aligning scattered
+   pairs, building NOT-ready copies) and emitting *sense items* (one per
+   operand pair / leaf read / NOT) plus a *combine schedule*.
+2. **Fusion** rewrites any combine whose inputs are single-use, same-plan
+   senses into one fused ``sense_reduce`` megakernel call (sense epilogue
+   feeds the reduce accumulator — no partials round-trip through HBM; with
+   a popcount root, only the counts leave the kernel).
+3. **Grouping** buckets every remaining sense by :class:`ReadPlan`, so all
+   same-plan senses across the *whole graph* run in ONE batched kernel call
+   (one row-gather from the device-resident Vth arena, one SET_FEATURE).
+4. **Caching**: the jitted executable is cached in an
+   :class:`~repro.api.plan_cache.ExecutableCache` keyed on the lowered plan
+   signature (DAG shape + page counts + backend), so a repeated materialize
+   of the same expression shape skips lowering-to-jaxpr and retracing
+   entirely — arena row indices and the padding mask are runtime inputs.
+
+Ledger accounting is batched alongside: one ``account_*_batch`` plus one
+``dma_to_controller_batch`` per sense group instead of O(pages) Python-loop
+entries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.graph import ASSOCIATIVE, BASE_OF, Leaf, Node, Op
+from repro.api.plan_cache import ExecutableCache
+from repro.core.mcflash import ReadPlan
+
+__all__ = ["ExecPlan", "Executor"]
+
+WordlineKey = Tuple[int, int, int]
+
+
+@dataclasses.dataclass
+class SenseItem:
+    """One logical sense/read: all pages of one stored vector."""
+    pid: int                      # partial id its packed result binds to
+    name: str                     # vector whose pages are sensed
+    wls: List[WordlineKey]
+    plan: ReadPlan
+    op_label: str                 # timing/energy op label
+    is_mcflash: bool              # MCFlash sense (True) vs default-ref read
+    which: Optional[str] = None   # page-read role when not is_mcflash
+
+    @property
+    def plan_key(self) -> tuple:
+        return (self.plan, self.op_label, self.is_mcflash, self.which)
+
+
+@dataclasses.dataclass
+class FusedSpec:
+    """A combine folded into one sense_reduce megakernel call."""
+    plan: ReadPlan
+    op_label: str
+    wls: List[WordlineKey]        # n_operands * n_pages, operand-major
+    n_operands: int
+    n_pages: int
+
+
+@dataclasses.dataclass
+class CombineStep:
+    out: int
+    args: Tuple[int, ...]
+    op: str
+    invert: bool
+    fused: Optional[FusedSpec] = None
+
+
+@dataclasses.dataclass
+class SenseGroup:
+    """All non-fused senses sharing one ReadPlan: ONE batched kernel call."""
+    plan: ReadPlan
+    op_label: str
+    is_mcflash: bool
+    which: Optional[str]
+    items: List[SenseItem]
+
+    @property
+    def wls(self) -> List[WordlineKey]:
+        return [wl for it in self.items for wl in it.wls]
+
+    def spans(self) -> List[Tuple[int, Tuple[int, int]]]:
+        """(pid, (row_start, row_end)) slices into the batched sense output."""
+        out, start = [], 0
+        for it in self.items:
+            out.append((it.pid, (start, start + len(it.wls))))
+            start += len(it.wls)
+        return out
+
+
+@dataclasses.dataclass
+class ExecPlan:
+    """Static, signature-keyed execution schedule for one canonical DAG."""
+    groups: List[SenseGroup]
+    steps: List[CombineStep]
+    root: int
+    out_pages: int                # pages in the root partial
+    out_words: int                # packed words in the root partial
+    senses: int                   # logical in-flash senses (paper semantics)
+    items: int                    # all sense/read items incl. fused operands
+
+    def signature(self, backend_name: str) -> tuple:
+        """Hashable shape of the plan: everything the executable closes over
+        (structure, plans, page counts) minus the runtime inputs (arena rows,
+        mask) — the ExecutableCache key."""
+        return (
+            backend_name,
+            tuple((g.plan, g.op_label,
+                   tuple((it.pid, len(it.wls)) for it in g.items))
+                  for g in self.groups),
+            tuple((st.out, st.args, st.op, st.invert,
+                   (st.fused.plan, st.fused.n_operands, st.fused.n_pages)
+                   if st.fused else None)
+                  for st in self.steps),
+            self.root, self.out_words,
+        )
+
+
+class _Lowering:
+    """One DAG -> ExecPlan pass (resolves placement; cheap, pure Python)."""
+
+    def __init__(self, session):
+        self.session = session
+        self.ftl = session.ftl
+        self.items: List[SenseItem] = []
+        self.steps: List[CombineStep] = []
+        self.pages_of: Dict[int, int] = {}    # pid -> page count
+        self._next = 0
+
+    def _pid(self, n_pages: int) -> int:
+        pid = self._next
+        self._next += 1
+        self.pages_of[pid] = n_pages
+        return pid
+
+    def _item(self, name: str, wls: List[WordlineKey], plan: ReadPlan,
+              op_label: str, is_mcflash: bool, which: str | None = None) -> int:
+        pid = self._pid(len(wls))
+        self.items.append(SenseItem(pid, name, list(wls), plan, op_label,
+                                    is_mcflash, which))
+        return pid
+
+    def _read_leaf(self, name: str) -> int:
+        meta = self.ftl.vectors[name]
+        plan = self.session.device.page_read_plan(meta.role)
+        from repro.flash.device import PAGE_READ_OP
+        return self._item(name, meta.pages, plan, PAGE_READ_OP[meta.role],
+                          is_mcflash=False, which=meta.role)
+
+    def _sense_pair(self, op: str, name_a: str, name_b: str) -> int:
+        self.ftl.ensure_aligned(name_a, name_b)
+        pages = self.ftl.vectors[name_a].pages
+        return self._item(name_a, pages, self.session.plan(op), op,
+                          is_mcflash=True)
+
+    def _sense_not(self, name: str) -> int:
+        meta = self.ftl.ensure_not_ready(name, backend=self.session.backend)
+        return self._item(meta.name, meta.pages, self.session.plan("not"),
+                          "not", is_mcflash=True)
+
+    def _lower_node(self, node: Op, memo: Dict[Node, int]) -> int:
+        op = node.op
+        if op == "not":
+            (x,) = node.args
+            if isinstance(x, Leaf):
+                return self._sense_not(x.name)
+            # canonical graphs fold ~(op ...) into the inverse twin, so this
+            # only triggers on hand-built non-canonical nodes
+            pid = self._pid(self.pages_of[memo[x]])
+            self.steps.append(CombineStep(pid, (memo[x],), "and", True))
+            return pid
+        # exactly two stored operands: a single (possibly inverse-read) sense
+        if len(node.args) == 2 and all(isinstance(a, Leaf) for a in node.args):
+            return self._sense_pair(op, node.args[0].name, node.args[1].name)
+        base = BASE_OF.get(op, op)
+        invert = op in BASE_OF
+        assert base in ASSOCIATIVE or len(node.args) == 2, node
+        leaves = [a for a in node.args if isinstance(a, Leaf)]
+        others = [a for a in node.args if not isinstance(a, Leaf)]
+        pairs, leftover = self.ftl.pair_for_sense([l.name for l in leaves])
+        args = [self._sense_pair(base, a, b) for a, b in pairs]
+        if leftover is not None:
+            args.append(self._read_leaf(leftover))
+        args.extend(memo[o] for o in others)
+        if len(args) == 1 and not invert:
+            return args[0]
+        pid = self._pid(self.pages_of[args[0]])
+        self.steps.append(CombineStep(pid, tuple(args), base, invert))
+        return pid
+
+    def lower(self, root: Node) -> ExecPlan:
+        # iterative post-order: mixed-op expressions nest one level per op
+        # switch, so deep graphs must not recurse.  Leaf children are NOT
+        # pre-lowered — ops consume their leaves directly as pair senses;
+        # only a Leaf root becomes a standalone read.
+        memo: Dict[Node, int] = {}
+        if isinstance(root, Leaf):
+            return self._finish(self._read_leaf(root.name))
+        stack = [root]
+        while stack:
+            n = stack[-1]
+            if n in memo:
+                stack.pop()
+                continue
+            assert isinstance(n, Op), n
+            pending = [a for a in n.args
+                       if not isinstance(a, Leaf) and a not in memo]
+            if pending:
+                stack.extend(pending)
+                continue
+            stack.pop()
+            memo[n] = self._lower_node(n, memo)
+        return self._finish(memo[root])
+    def _finish(self, root_pid: int) -> ExecPlan:
+        self._fuse(root_pid)
+        groups = self._group()
+        fused_ops = sum(st.fused.n_operands for st in self.steps
+                        if st.fused is not None)
+        senses = sum(1 for it in self.items if it.is_mcflash) + fused_ops
+        return ExecPlan(groups=groups, steps=self.steps, root=root_pid,
+                        out_pages=self.pages_of[root_pid],
+                        out_words=self.pages_of[root_pid]
+                        * (self.ftl.cfg.page_bits // 32),
+                        senses=senses, items=len(self.items) + fused_ops)
+
+    def _fuse(self, root: int) -> None:
+        """Fold combines over single-use, same-plan senses into megakernels."""
+        use: Dict[int, int] = {root: 1}
+        for st in self.steps:
+            for a in st.args:
+                use[a] = use.get(a, 0) + 1
+        by_pid = {it.pid: it for it in self.items}
+        consumed: set = set()
+        for st in self.steps:
+            if st.op not in ASSOCIATIVE or len(st.args) < 2:
+                continue
+            its = [by_pid.get(a) for a in st.args]
+            if any(it is None or not it.is_mcflash or use[it.pid] != 1
+                   for it in its):
+                continue
+            key = its[0].plan_key
+            n_pages = len(its[0].wls)
+            if any(it.plan_key != key or len(it.wls) != n_pages for it in its):
+                continue
+            st.fused = FusedSpec(plan=its[0].plan, op_label=its[0].op_label,
+                                 wls=[wl for it in its for wl in it.wls],
+                                 n_operands=len(its), n_pages=n_pages)
+            consumed.update(it.pid for it in its)
+        if consumed:
+            self.items = [it for it in self.items if it.pid not in consumed]
+
+    def _group(self) -> List[SenseGroup]:
+        groups: Dict[tuple, SenseGroup] = {}
+        for it in self.items:
+            g = groups.get(it.plan_key)
+            if g is None:
+                g = groups[it.plan_key] = SenseGroup(
+                    it.plan, it.op_label, it.is_mcflash, it.which, [])
+            g.items.append(it)
+        return list(groups.values())
+
+
+class Executor:
+    """Session-bound compiled executor with a per-backend executable cache."""
+
+    def __init__(self, session):
+        self.session = session
+        self.cache = ExecutableCache()
+        self.traces = 0               # jit trace events across all executables
+
+    # -- public entry points ---------------------------------------------------
+    def run(self, node: Node, n_bits: int) -> jnp.ndarray:
+        """Execute a canonical DAG -> packed 1-D uint32 (tail masked)."""
+        return self._execute(node, n_bits, popcount=False)
+
+    def run_popcount(self, node: Node, n_bits: int) -> jnp.ndarray:
+        """Execute a canonical DAG -> scalar int32 popcount (fusing the count
+        into the root megakernel when the plan allows)."""
+        return self._execute(node, n_bits, popcount=True)
+
+    def stats(self) -> dict:
+        return {**self.cache.stats(), "traces": self.traces}
+
+    # -- internals ---------------------------------------------------------------
+    def _execute(self, node: Node, n_bits: int, popcount: bool):
+        sess = self.session
+        plan = _Lowering(sess).lower(node)
+        self._account(plan)
+        key = (plan.signature(sess.backend.name), popcount)
+        fn = self.cache.get(key, lambda: self._build(plan, popcount))
+        dev = sess.device
+        # The arena row-gathers run OUTSIDE the cached executable (one take
+        # per group), so executable input shapes depend only on the plan
+        # signature — arena growth must not retrace cached executables.
+        group_vth = tuple(dev.vth_stack(g.wls) for g in plan.groups)
+        fused_vth = tuple(dev.vth_stack(st.fused.wls) for st in plan.steps
+                          if st.fused is not None)
+        mask = sess.tail_mask(n_bits, plan.out_words)
+        return fn(group_vth, fused_vth, mask)
+
+    def _account(self, plan: ExecPlan) -> None:
+        """Batched ledger + counter updates (one call per sense group)."""
+        sess = self.session
+        dev = sess.device
+        for g in plan.groups:
+            if g.is_mcflash:
+                dev.account_mcflash_batch(g.wls, g.op_label)
+            else:
+                dev.account_page_read_batch(g.wls, g.which)
+            dev.dma_to_controller_batch(g.wls)
+        n_fused = 0
+        for st in plan.steps:
+            if st.fused is not None:
+                dev.account_mcflash_batch(st.fused.wls, st.fused.op_label)
+                dev.dma_to_controller_batch(st.fused.wls)
+                n_fused += 1
+        sess.in_flash_senses += plan.senses
+        sess.sense_items += plan.items
+        sess.sense_batches += len(plan.groups) + n_fused
+        sess.megakernel_calls += n_fused
+        sess.fused_reduce_calls += sum(
+            1 for st in plan.steps if len(st.args) > 1 or st.invert
+            or st.fused is not None)
+
+    def _build(self, plan: ExecPlan, popcount: bool):
+        """Close a jitted executable over the static plan.  Runtime inputs:
+        the gathered per-group / per-fused-step Vth stacks and the packed
+        padding mask — shapes fixed by the plan signature."""
+        backend = self.session.backend
+        executor = self
+        # popcount folds into the root megakernel only when the root IS the
+        # last step and that step fused (steps are emitted in post-order)
+        fuse_pc = (popcount and bool(plan.steps)
+                   and plan.steps[-1].out == plan.root
+                   and plan.steps[-1].fused is not None)
+
+        def run(group_vth, fused_vth, mask):
+            executor.traces += 1      # Python side effect: fires at trace time
+            partials: Dict[int, jnp.ndarray] = {}
+            for g, vth in zip(plan.groups, group_vth):
+                packed = backend.sense(vth, g.plan)
+                for pid, (s, e) in g.spans():
+                    partials[pid] = packed[s:e].reshape(-1)
+            fi = 0
+            for st in plan.steps:
+                if st.fused is not None:
+                    f = st.fused
+                    vth = fused_vth[fi].reshape(f.n_operands, f.n_pages, -1)
+                    fi += 1
+                    if fuse_pc and st.out == plan.root:
+                        counts = backend.sense_reduce_popcount(
+                            vth, f.plan, mask.reshape(f.n_pages, -1),
+                            op=st.op, invert=st.invert)
+                        return jnp.sum(counts, dtype=jnp.int32)
+                    partials[st.out] = backend.sense_reduce(
+                        vth, f.plan, op=st.op, invert=st.invert).reshape(-1)
+                elif len(st.args) == 1 and not st.invert:
+                    partials[st.out] = partials[st.args[0]]
+                else:
+                    stack = jnp.stack([partials[a] for a in st.args])
+                    out = backend.reduce(stack.reshape(len(st.args), 1, -1),
+                                         st.op, invert=st.invert)
+                    partials[st.out] = out.reshape(-1)
+            out = partials[plan.root] & mask
+            if popcount:
+                return backend.popcount(out.reshape(1, -1))[0]
+            return out
+
+        return jax.jit(run)

@@ -24,7 +24,9 @@ ASSOCIATIVE = ("and", "or", "xor")
 #: op <-> its inverse-read twin (both directions).
 INVERSE = {"and": "nand", "nand": "and", "or": "nor", "nor": "or",
            "xor": "xnor", "xnor": "xor"}
-#: inverted op -> (associative base op used for partial combines).
+#: inverted op -> (associative base op used for partial combines; the k-ary
+#: node evaluates as base-op fold + final inversion — ``xnor`` included,
+#: since a k-ary xnor only arises from ``~(xor chain)``).
 BASE_OF = {"nand": "and", "nor": "or", "xnor": "xor"}
 
 

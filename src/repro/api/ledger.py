@@ -11,7 +11,7 @@ session's ``stats()`` reporting.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Mapping
 
 
 @dataclasses.dataclass
@@ -27,14 +27,30 @@ class Ledger:
 
     def add_die(self, die: int, us: float, uj: float = 0.0,
                 category: str = "sense") -> None:
-        self.die_busy_us[die] = self.die_busy_us.get(die, 0.0) + us
-        self.category_us[category] = self.category_us.get(category, 0.0) + us
+        self.add_die_batch({die: us}, uj, commands=1, category=category)
+
+    def add_die_batch(self, per_die_us: Mapping[int, float], uj: float = 0.0,
+                      commands: int = 1, category: str = "sense") -> None:
+        """Account a whole command batch in one call (no O(pages) loop):
+        ``per_die_us`` is pre-aggregated busy time per die."""
+        total = 0.0
+        for die, us in per_die_us.items():
+            self.die_busy_us[die] = self.die_busy_us.get(die, 0.0) + us
+            total += us
+        self.category_us[category] = self.category_us.get(category, 0.0) + total
         self.energy_uj += uj
-        self.commands += 1
+        self.commands += commands
 
     def add_channel(self, ch: int, us: float) -> None:
-        self.channel_busy_us[ch] = self.channel_busy_us.get(ch, 0.0) + us
-        self.category_us["dma"] = self.category_us.get("dma", 0.0) + us
+        self.add_channel_batch({ch: us})
+
+    def add_channel_batch(self, per_channel_us: Mapping[int, float]) -> None:
+        """Batched NAND->controller transfer accounting, one call per group."""
+        total = 0.0
+        for ch, us in per_channel_us.items():
+            self.channel_busy_us[ch] = self.channel_busy_us.get(ch, 0.0) + us
+            total += us
+        self.category_us["dma"] = self.category_us.get("dma", 0.0) + total
 
     def add_host(self, us: float) -> None:
         self.host_busy_us += us

@@ -1,14 +1,22 @@
-"""Keyed read-plan cache with hit/miss counters.
+"""Keyed compilation caches with hit/miss counters.
 
-``plan_op`` compiles a Table-1 op into quantized DAC references for a given
-chip model; the compilation is cheap but was re-run on *every* page read at
-every entry point.  The session layer plans once per ``(op, chip,
-inverse-read)`` key and replays the cached :class:`ReadPlan` for all
-subsequent senses — the counters make the caching observable (and testable).
+Two levels of compiled artefact are cached here:
+
+- :class:`PlanCache` — ``plan_op`` compiles a Table-1 op into quantized DAC
+  references for a given chip model; the compilation is cheap but was re-run
+  on *every* page read at every entry point.  The session layer plans once
+  per ``(op, chip, inverse-read)`` key and replays the cached
+  :class:`ReadPlan` for all subsequent senses.
+- :class:`ExecutableCache` — the compiled-DAG executor caches whole jitted
+  executables keyed on the lowered plan signature (DAG shape + page counts +
+  backend), so a repeated materialize of the same expression shape skips
+  lowering-to-jaxpr and retracing entirely.
+
+The counters make both caches observable (and testable).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Callable, Dict, Hashable, Tuple
 
 from repro.core.mcflash import ReadPlan, plan_op
 from repro.core.vth_model import ChipModel
@@ -51,3 +59,37 @@ class PlanCache:
 
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses, "entries": len(self._plans)}
+
+
+class ExecutableCache:
+    """Caches built executables (or any expensive artefact) per signature.
+
+    ``get(key, build)`` returns the cached artefact for ``key`` or calls
+    ``build()`` once and stores the result; hit/miss counters make repeated
+    materializations of the same DAG shape observable as cache hits.
+    """
+
+    def __init__(self) -> None:
+        self._entries: Dict[Hashable, object] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: Hashable, build: Callable[[], object]) -> object:
+        entry = self._entries.get(key)
+        if entry is None:
+            entry = self._entries[key] = build()
+            self.misses += 1
+        else:
+            self.hits += 1
+        return entry
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.hits = self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._entries)}

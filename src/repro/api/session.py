@@ -6,13 +6,12 @@ lazy op DAG, and on :meth:`materialize`:
 
 1. canonicalises the DAG (:func:`repro.api.graph.simplify`) — associative
    chains fuse into one k-ary node, ``~(a & b)`` becomes an inverse-read NAND;
-2. compiles every op it touches through a per-chip keyed :class:`PlanCache`
-   (hit/miss counters exposed via :meth:`stats`);
-3. dispatches batched multi-plane execution: all pages of an aligned pair go
-   through **one** backend sense call, and all chain partials through **one**
-   ``bitwise_reduce`` combine;
-4. threads the unified timing/energy :class:`~repro.api.ledger.Ledger`
-   through every command.
+2. hands the canonical DAG to the compiled :class:`~repro.api.executor.Executor`,
+   which lowers it into a static ``ExecPlan`` (whole-graph senses grouped by
+   read plan, homogeneous chains fused into one sense→reduce megakernel) and
+   replays a cached jitted executable when the DAG shape was seen before;
+3. threads the unified timing/energy :class:`~repro.api.ledger.Ledger`
+   through every command via batched accounting entries.
 
 Backends are pluggable (:class:`SimBackend` oracle / :class:`PallasBackend`
 kernels) and bit-exact against each other.
@@ -25,7 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.backends import Backend, get_backend
-from repro.api.graph import ASSOCIATIVE, BASE_OF, BitVector, Leaf, Node, Op, simplify
+from repro.api.executor import Executor
+from repro.api.graph import ASSOCIATIVE, BitVector, Leaf, simplify
 from repro.api.plan_cache import PlanCache
 from repro.core import encoding
 from repro.core import mcflash as _mcflash
@@ -77,8 +77,12 @@ class ComputeSession:
         self.device.set_default_backend(self.backend)
         self.plans: PlanCache = self.device.plans     # shared per-chip plan cache
         self.ledger = self.device.ledger
-        self.fused_reduce_calls = 0
-        self.in_flash_senses = 0
+        self.executor = Executor(self)
+        self.fused_reduce_calls = 0    # combine steps (incl. fused megakernels)
+        self.in_flash_senses = 0       # logical senses (one per pair / NOT)
+        self.sense_items = 0           # senses + leaf reads (grouped per plan)
+        self.sense_batches = 0         # batched sense kernel dispatches
+        self.megakernel_calls = 0      # fused sense->reduce(->popcount) calls
         self._tail_masks: Dict[Tuple[int, int], jnp.ndarray] = {}
 
     # -- registration --------------------------------------------------------
@@ -141,158 +145,53 @@ class ComputeSession:
         the final controller->host transfer in the ledger.
         """
         node = simplify(expr.node)
-        packed = self._mask_tail(self._eval(node, memo={}), expr.n_bits)
+        packed = self.executor.run(node, expr.n_bits)
         if to_host:
             self.device.ext_to_host(int(packed.shape[-1]) * 4)
         if unpacked:
             return kops.unpack_bits(packed.reshape(1, -1))[0][: expr.n_bits]
         return packed
 
-    def _mask_tail(self, packed: jnp.ndarray, n_bits: int) -> jnp.ndarray:
-        """Zero the page-padding bits past ``n_bits`` (inverse-read ops turn
-        padded zeros into ones, which would corrupt popcounts and packed
-        consumers)."""
-        total = int(packed.shape[0]) * 32
-        if n_bits >= total:
-            return packed
-        mask = self._tail_masks.get((n_bits, total))
+    def tail_mask(self, n_bits: int, total_words: int) -> jnp.ndarray:
+        """Packed (total_words,) mask zeroing page-padding bits past
+        ``n_bits`` (inverse-read ops turn padded zeros into ones, which would
+        corrupt popcounts and packed consumers).  Cached per shape."""
+        total = total_words * 32
+        key = (min(n_bits, total), total)
+        mask = self._tail_masks.get(key)
         if mask is None:
-            bits = np.zeros(total, np.uint8)
-            bits[:n_bits] = 1
-            mask = kops.pack_bits(jnp.asarray(bits).reshape(1, -1))[0]
-            self._tail_masks[(n_bits, total)] = mask
-        return packed & mask
+            if n_bits >= total:
+                mask = jnp.full((total_words,), 0xFFFFFFFF, jnp.uint32)
+            else:
+                bits = np.zeros(total, np.uint8)
+                bits[:n_bits] = 1
+                mask = kops.pack_bits(jnp.asarray(bits).reshape(1, -1))[0]
+            self._tail_masks[key] = mask
+        return mask
 
     def popcount(self, expr: BitVector, *, to_host: bool = True) -> int:
-        """Materialize + bit-count through the backend's popcount kernel."""
-        packed = self.materialize(expr, to_host=to_host)
-        return int(self.backend.popcount(packed.reshape(1, -1))[0])
+        """Materialize + bit-count without leaving the device: the count
+        fuses into the root megakernel when the plan allows, and only the
+        4-byte count crosses to the host (``to_host`` accounts exactly
+        that — not a page transfer)."""
+        node = simplify(expr.node)
+        count = self.executor.run_popcount(node, expr.n_bits)
+        if to_host:
+            self.device.ext_to_host(4)
+        return int(count)
 
     def stats(self) -> dict:
         return {
             "backend": self.backend.name,
             "plan_cache": self.plans.stats(),
+            "executor": self.executor.stats(),
             "fused_reduce_calls": self.fused_reduce_calls,
             "in_flash_senses": self.in_flash_senses,
+            "sense_items": self.sense_items,
+            "sense_batches": self.sense_batches,
+            "megakernel_calls": self.megakernel_calls,
             "ledger": self.ledger.summary(),
         }
-
-    # -- DAG evaluation ------------------------------------------------------
-    def _eval(self, node: Node, memo: Dict[Node, jnp.ndarray]) -> jnp.ndarray:
-        """Evaluate a canonical node to a packed 1-D uint32 vector."""
-        out = memo.get(node)
-        if out is not None:
-            return out
-        if isinstance(node, Leaf):
-            out = self._read_leaf(node.name)
-        elif node.op == "not":
-            (x,) = node.args
-            if isinstance(x, Leaf):
-                out = self._sense_not_leaf(x.name)
-            else:
-                out = self._combine([self._eval(x, memo)], "and", invert=True)
-        else:
-            out = self._eval_chain(node, memo)
-        memo[node] = out
-        return out
-
-    def _eval_chain(self, node: Op, memo: Dict[Node, jnp.ndarray]) -> jnp.ndarray:
-        """k-ary op node: per-pair in-flash senses + one fused combine."""
-        op = node.op
-        base = BASE_OF.get(op, op)
-        invert = op in BASE_OF
-        assert base in ASSOCIATIVE or op == "xnor" or len(node.args) == 2, node
-        # Exactly two stored operands: a single (possibly inverse-read) sense.
-        if len(node.args) == 2 and all(isinstance(a, Leaf) for a in node.args):
-            return self._sense_pair(op, node.args[0].name, node.args[1].name)
-        leaves = [a for a in node.args if isinstance(a, Leaf)]
-        others = [a for a in node.args if not isinstance(a, Leaf)]
-        pairs, leftover = self._pair_leaves(leaves)
-        partials = [self._sense_pair(base, a, b) for a, b in pairs]
-        if leftover is not None:
-            partials.append(self._read_leaf(leftover))
-        partials.extend(self._eval(o, memo) for o in others)
-        return self._combine(partials, base, invert=invert)
-
-    def _pair_leaves(self, leaves: List[Leaf]) -> Tuple[List[Tuple[str, str]], "str | None"]:
-        """Pair operand names for shared-wordline senses.
-
-        Already-aligned partners pair first (no realignment cost); the rest
-        pair greedily (each costs one copyback realignment, the paper's
-        non-aligned path).  An odd leftover is read out as its own partial.
-        """
-        names = [l.name for l in leaves]
-        used: set = set()
-        pairs: List[Tuple[str, str]] = []
-        rest: List[str] = []
-        for i, n in enumerate(names):
-            if i in used:
-                continue
-            partner = self.ftl._pair_of.get(n)
-            j = next((k for k in range(i + 1, len(names))
-                      if k not in used and names[k] == partner), None)
-            if j is not None:
-                pairs.append((n, partner))
-                used.update((i, j))
-            else:
-                rest.append(n)
-                used.add(i)
-        while len(rest) >= 2:
-            pairs.append((rest.pop(0), rest.pop(0)))
-        return pairs, (rest[0] if rest else None)
-
-    def _sense_pages(self, pages, op: str) -> jnp.ndarray:
-        """Batched in-flash sense over a page set + DMA accounting -> packed
-        1-D words (page-aligned; the tail is masked at materialize)."""
-        out = self.device.mcflash_read_batch(pages, op, plan=self.plan(op),
-                                             backend=self.backend)
-        self.in_flash_senses += 1
-        for wl in pages:
-            self.device.dma_to_controller(wl)
-        return out.reshape(-1)
-
-    def _sense_pair(self, op: str, name_a: str, name_b: str) -> jnp.ndarray:
-        """One in-flash sense over an aligned pair, batched across its pages."""
-        ftl = self.ftl
-        if ftl._pair_of.get(name_a) != name_b:
-            ftl.align(name_a, name_b)
-        return self._sense_pages(ftl.vectors[name_a].pages, op)
-
-    def _read_leaf(self, name: str) -> jnp.ndarray:
-        """Standard (default-reference) read of a stored vector -> packed,
-        batched across its pages like the sense paths."""
-        meta = self.ftl.vectors[name]
-        out = self.device.page_read_batch(meta.pages, meta.role,
-                                          backend=self.backend)
-        for wl in meta.pages:
-            self.device.dma_to_controller(wl)
-        return out.reshape(-1)
-
-    def _sense_not_leaf(self, name: str) -> jnp.ndarray:
-        """In-flash NOT: the operand must sit in the MSB page over a zero LSB
-        page (paper Table 1).  Vectors stored any other way are copyback-
-        rewritten once into a NOT-ready placement (cached under a derived
-        name) — the same realignment cost model as scattered operand pairs.
-        """
-        ftl = self.ftl
-        meta = ftl.vectors[name]
-        if not (meta.role == "msb" and name not in ftl._pair_of):
-            copy = ftl.derived_not_name(name)
-            if copy not in ftl.vectors:
-                packed = self._read_leaf(name)
-                bits = kops.unpack_bits(packed.reshape(1, -1))[0][: meta.n_bits]
-                ftl.write_scattered(copy, bits, role="msb")
-            meta = ftl.vectors[copy]
-        return self._sense_pages(meta.pages, "not")
-
-    def _combine(self, partials: List[jnp.ndarray], op: str,
-                 invert: bool = False) -> jnp.ndarray:
-        """Controller-side combine of chain partials: ONE fused reduce call."""
-        if len(partials) == 1 and not invert:
-            return partials[0]
-        stack = jnp.stack(partials).reshape(len(partials), 1, -1)
-        self.fused_reduce_calls += 1
-        return self.backend.reduce(stack, op, invert=invert).reshape(-1)
 
 
 # ---------------------------------------------------------------------------

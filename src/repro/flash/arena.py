@@ -1,0 +1,83 @@
+"""Device-resident Vth arena: one preallocated (slots, page_bits) buffer.
+
+The functional device used to hold per-wordline Vth tensors in a Python
+dict, so every batched sense paid a host-side ``jnp.stack`` over N separate
+device arrays.  The arena replaces that with a single device-resident 2-D
+buffer plus a free-slot allocator: programming a wordline scatters one row,
+and a batched sense is a single ``jnp.take`` of row indices — exactly the
+shape the compiled executor feeds to the fused kernels, with no per-page
+host round-trips on the read path.
+
+The buffer grows geometrically (rows double, never shrink) so steady-state
+programs/reads never reallocate; freed slots are recycled LIFO.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["VthArena"]
+
+
+@jax.jit
+def _scatter_rows(buf: jnp.ndarray, idx: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
+    return buf.at[idx].set(rows)
+
+
+class VthArena:
+    """Preallocated (slots, page_bits) float32 Vth storage with a free list."""
+
+    def __init__(self, page_bits: int, init_slots: int = 16,
+                 dtype=jnp.float32):
+        self.page_bits = int(page_bits)
+        self.dtype = dtype
+        self._buf = jnp.zeros((max(int(init_slots), 1), self.page_bits), dtype)
+        self._free: List[int] = list(range(self._buf.shape[0] - 1, -1, -1))
+        self.grows = 0                   # observable reallocation count
+
+    # -- allocation -----------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return int(self._buf.shape[0])
+
+    @property
+    def used(self) -> int:
+        return self.capacity - len(self._free)
+
+    def _grow(self, min_slots: int) -> None:
+        new_cap = max(self.capacity * 2, min_slots)
+        extra = jnp.zeros((new_cap - self.capacity, self.page_bits), self.dtype)
+        old_cap = self.capacity
+        self._buf = jnp.concatenate([self._buf, extra], axis=0)
+        self._free.extend(range(new_cap - 1, old_cap - 1, -1))
+        self.grows += 1
+
+    def alloc(self, n: int = 1) -> List[int]:
+        """Reserve ``n`` row slots (growing the buffer if exhausted)."""
+        if len(self._free) < n:
+            self._grow(self.capacity + n - len(self._free))
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, slots: Sequence[int]) -> None:
+        self._free.extend(int(s) for s in slots)
+
+    # -- data movement --------------------------------------------------------
+    @property
+    def buf(self) -> jnp.ndarray:
+        """The whole device-resident buffer (feed this to compiled executables)."""
+        return self._buf
+
+    def write(self, slots: Sequence[int], rows: jnp.ndarray) -> None:
+        """Scatter row data into slots: (len(slots), page_bits) in ONE update."""
+        rows = jnp.asarray(rows, self.dtype).reshape(len(slots), self.page_bits)
+        self._buf = _scatter_rows(self._buf, jnp.asarray(slots, jnp.int32), rows)
+
+    def rows(self, slots: Sequence[int]) -> jnp.ndarray:
+        """Row-index vector for a slot list (executable input)."""
+        return jnp.asarray(list(slots), jnp.int32)
+
+    def gather(self, slots: Sequence[int]) -> jnp.ndarray:
+        """(len(slots), page_bits) view of the requested rows — one take."""
+        return jnp.take(self._buf, self.rows(slots), axis=0)

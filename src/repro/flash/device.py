@@ -1,16 +1,21 @@
 """Functional simulated NAND flash device.
 
-Holds per-wordline Vth tensors (sparsely, only programmed wordlines),
-executes MCFlash read plans through a pluggable backend (Pallas sense
-kernels by default), tracks P/E cycles per block, and threads the unified
-:class:`repro.api.Ledger` (time + energy) through every command so that
-application workloads derive their latency/energy from the *actual simulated
-command stream* rather than hand-waved constants.
+Per-wordline Vth lives in a device-resident :class:`~repro.flash.arena.VthArena`
+— one preallocated ``(slots, page_bits)`` buffer — so a batched sense is a
+single row-gather instead of a host-side ``jnp.stack`` over a dict of
+arrays.  Read plans execute through a pluggable backend (Pallas sense
+kernels by default), P/E cycles are tracked per block, and the unified
+:class:`repro.api.Ledger` (time + energy) is threaded through every command
+so that application workloads derive their latency/energy from the *actual
+simulated command stream* rather than hand-waved constants.
 
 Read plans compile once per (op, chip) through the device's
 :class:`repro.api.PlanCache`; multi-page ops dispatch through
 :meth:`mcflash_read_batch`, which senses all pages of a batch in one fused
-kernel call while accounting a single SET_FEATURE switch.
+kernel call, accounts a single SET_FEATURE switch, and books the whole
+batch's die/channel busy time through the batched ledger entry points
+(:meth:`account_mcflash_batch` / :meth:`dma_to_controller_batch`) — no
+O(pages) Python accounting loops on the hot path.
 """
 from __future__ import annotations
 
@@ -24,12 +29,15 @@ from repro.api.plan_cache import PlanCache
 from repro.core import mcflash, vth_model
 from repro.core.mcflash import ReadPlan
 from repro.core.vth_model import ChipModel
+from repro.flash.arena import VthArena
 from repro.flash.energy import EnergyModel
 from repro.flash.geometry import SSDConfig
 from repro.flash.timing import TimingModel
-from repro.kernels import ops as kops
 
 WordlineKey = Tuple[int, int, int]  # (plane, block, wordline)
+
+#: ledger/timing op label for a standard page read of each role
+PAGE_READ_OP = {"lsb": "and", "msb": "or"}
 
 
 class FlashDevice:
@@ -44,7 +52,9 @@ class FlashDevice:
         self.config = config or SSDConfig()
         self.timing = timing or TimingModel()
         self.energy = energy or EnergyModel()
-        self._vth: Dict[WordlineKey, jnp.ndarray] = {}
+        self._page_bits = self.config.page_bits
+        self.arena = VthArena(self._page_bits)
+        self._slot_of: Dict[WordlineKey, int] = {}
         self._operands: Dict[WordlineKey, Tuple[jnp.ndarray, jnp.ndarray]] = {}
         self.pe_counts: Dict[Tuple[int, int], int] = {}
         self.ledger = Ledger()
@@ -52,7 +62,6 @@ class FlashDevice:
         from repro.api.backends import PallasBackend   # layers on kernels only
         self._default_backend = PallasBackend()
         self._key = jax.random.PRNGKey(seed)
-        self._page_bits = self.config.page_bits
         self.ftl = None                # first-bound FTL registers itself here
 
     def set_default_backend(self, backend) -> None:
@@ -72,23 +81,94 @@ class FlashDevice:
         self._key, sub = jax.random.split(self._key)
         return sub
 
+    # -- arena access (the compiled executor's input surface) ----------------
+    def vth_rows(self, wls: List[WordlineKey]) -> jnp.ndarray:
+        """Arena row indices for a wordline batch (executable input)."""
+        return self.arena.rows([self._slot_of[wl] for wl in wls])
+
+    def vth_stack(self, wls: List[WordlineKey]) -> jnp.ndarray:
+        """(N, page_bits) Vth of a wordline batch — one arena gather."""
+        return self.arena.gather([self._slot_of[wl] for wl in wls])
+
     # -- commands -----------------------------------------------------------
+    def program_shared_batch(self, wls: List[WordlineKey],
+                             lsb_pages: List[jnp.ndarray],
+                             msb_pages: List[jnp.ndarray],
+                             retention_hours: float = 0.0) -> None:
+        """Program the shared LSB/MSB pages of a wordline batch.
+
+        Vth generation stays per-page (independent RNG streams), but the
+        arena write is ONE scatter and the ledger entry ONE batched call.
+        """
+        assert len(wls) == len(lsb_pages) == len(msb_pages)
+        if not wls:
+            return
+        vths = []
+        for wl, lsb_bits, msb_bits in zip(wls, lsb_pages, msb_pages):
+            assert lsb_bits.shape == (self._page_bits,), lsb_bits.shape
+            plane, block, _ = wl
+            n_pe = self.pe_counts.get((plane, block), 0)
+            vth, _ = vth_model.program_page(
+                self._next_key(), lsb_bits, msb_bits, self.chip,
+                n_pe=float(n_pe), retention_hours=retention_hours)
+            vths.append(vth)
+            self._operands[wl] = (lsb_bits.astype(jnp.uint8),
+                                  msb_bits.astype(jnp.uint8))
+        slots = []
+        for wl in wls:
+            slot = self._slot_of.get(wl)
+            if slot is None:
+                (slot,) = self.arena.alloc(1)
+                self._slot_of[wl] = slot
+            slots.append(slot)
+        self.arena.write(slots, jnp.stack(vths))
+        # MLC shared-page program: 2 pages' worth of ISPP per wordline
+        per_die: Dict[int, float] = {}
+        for wl in wls:
+            die = self._die_of_plane(wl[0])
+            per_die[die] = per_die.get(die, 0.0) + 2 * self.timing.t_prog_us
+        self.ledger.add_die_batch(
+            per_die,
+            2 * self.energy.e_prog_uj_kb * self.config.page_kb * len(wls),
+            commands=len(wls), category="program")
+
     def program_shared(self, wl: WordlineKey, lsb_bits: jnp.ndarray,
                        msb_bits: jnp.ndarray, retention_hours: float = 0.0) -> None:
         """Program the shared LSB/MSB pages of one wordline (16 kB each)."""
-        assert lsb_bits.shape == (self._page_bits,), lsb_bits.shape
-        plane, block, _ = wl
-        n_pe = self.pe_counts.get((plane, block), 0)
-        vth, _ = vth_model.program_page(
-            self._next_key(), lsb_bits, msb_bits, self.chip,
-            n_pe=float(n_pe), retention_hours=retention_hours)
-        self._vth[wl] = vth
-        self._operands[wl] = (lsb_bits.astype(jnp.uint8), msb_bits.astype(jnp.uint8))
-        die = self._die_of_plane(plane)
-        # MLC shared-page program: 2 pages' worth of ISPP
-        self.ledger.add_die(die, 2 * self.timing.t_prog_us,
-                            2 * self.energy.e_prog_uj_kb * self.config.page_kb,
-                            category="program")
+        self.program_shared_batch([wl], [lsb_bits], [msb_bits],
+                                  retention_hours=retention_hours)
+
+    # -- batched ledger accounting ------------------------------------------
+    def account_mcflash_batch(self, wls: List[WordlineKey], op: str,
+                              switch_op: bool = True) -> None:
+        """Book die busy time + energy for a batched MCFlash sense: per-page
+        read latency aggregated per die, ONE SET_FEATURE for the whole batch."""
+        if not wls:
+            return
+        us = self.timing.op_latency_us(op, switch_op=False)
+        per_die: Dict[int, float] = {}
+        for wl in wls:
+            die = self._die_of_plane(wl[0])
+            per_die[die] = per_die.get(die, 0.0) + us
+        if switch_op:
+            first = self._die_of_plane(wls[0][0])
+            per_die[first] += self.timing.t_setfeature_us
+        uj = self.energy.read_energy_uj_kb(op) * self.config.page_kb * len(wls)
+        self.ledger.add_die_batch(per_die, uj, commands=len(wls))
+
+    def account_page_read_batch(self, wls: List[WordlineKey],
+                                which: str = "lsb") -> None:
+        """Book die busy time + energy for a batched default-reference read."""
+        if not wls:
+            return
+        op = PAGE_READ_OP[which]
+        us = self.timing.read_latency_us(op)
+        per_die: Dict[int, float] = {}
+        for wl in wls:
+            die = self._die_of_plane(wl[0])
+            per_die[die] = per_die.get(die, 0.0) + us
+        uj = self.energy.read_energy_uj_kb(op) * self.config.page_kb * len(wls)
+        self.ledger.add_die_batch(per_die, uj, commands=len(wls))
 
     def mcflash_read_batch(self, wls: List[WordlineKey], op: str, *,
                            plan: ReadPlan | None = None, backend=None,
@@ -96,52 +176,48 @@ class FlashDevice:
         """Execute one MCFlash op over a batch of programmed wordlines.
 
         All pages sense through **one** backend call ((N, page_bits) Vth
-        stack -> (N, words) packed results); the SET_FEATURE offset switch is
-        accounted once for the whole batch — the multi-plane dispatch path
-        the paper's §6 layout assumes.
+        gather -> (N, words) packed results); the SET_FEATURE offset switch
+        is accounted once for the whole batch — the multi-plane dispatch
+        path the paper's §6 layout assumes.
         """
         assert wls, "empty wordline batch"
         if plan is None:
             plan = self.plans.get(op, self.chip)
-        for i, wl in enumerate(wls):
-            die = self._die_of_plane(wl[0])
-            us = self.timing.op_latency_us(op, switch_op=switch_op and i == 0)
-            uj = self.energy.read_energy_uj_kb(op) * self.config.page_kb
-            self.ledger.add_die(die, us, uj)
-        stack = jnp.stack([self._vth[wl] for wl in wls])
+        self.account_mcflash_batch(wls, op, switch_op=switch_op)
         if backend is None:
             backend = self._default_backend
-        return backend.sense(stack, plan)
+        return backend.sense(self.vth_stack(wls), plan)
 
     def mcflash_read(self, wl: WordlineKey, op: str, packed: bool = True,
                      switch_op: bool = True, *, plan: ReadPlan | None = None,
                      backend=None) -> jnp.ndarray:
         """Execute an MCFlash bitwise op on a single programmed wordline."""
+        from repro.kernels import ops as kops
         packed_bits = self.mcflash_read_batch([wl], op, plan=plan,
                                               backend=backend,
                                               switch_op=switch_op)
         return packed_bits[0] if packed else kops.unpack_bits(packed_bits)[0]
+
+    def page_read_plan(self, which: str = "lsb") -> ReadPlan:
+        """Default-reference read plan for one shared-page role."""
+        v0, v1, v2 = self.chip.vref_default
+        if which == "lsb":
+            return ReadPlan("page_lsb", "lsb", (v1,), 1)
+        return ReadPlan("page_msb", "msb", (v0, v2), 2)
 
     def page_read_batch(self, wls: List[WordlineKey], which: str = "lsb", *,
                         backend=None) -> jnp.ndarray:
         """Standard (default-reference) read of a batch of pages in one
         fused sense call -> (N, words) packed."""
         assert wls, "empty wordline batch"
-        v0, v1, v2 = self.chip.vref_default
-        if which == "lsb":
-            plan, op = ReadPlan("page_lsb", "lsb", (v1,), 1), "and"
-        else:
-            plan, op = ReadPlan("page_msb", "msb", (v0, v2), 2), "or"
-        us = self.timing.read_latency_us(op)
-        uj = self.energy.read_energy_uj_kb(op) * self.config.page_kb
-        for wl in wls:
-            self.ledger.add_die(self._die_of_plane(wl[0]), us, uj)
-        stack = jnp.stack([self._vth[wl] for wl in wls])
-        return (backend or self._default_backend).sense(stack, plan)
+        self.account_page_read_batch(wls, which)
+        plan = self.page_read_plan(which)
+        return (backend or self._default_backend).sense(self.vth_stack(wls), plan)
 
     def page_read(self, wl: WordlineKey, which: str = "lsb",
                   packed: bool = True, *, backend=None) -> jnp.ndarray:
         """Standard (default-reference) page read."""
+        from repro.kernels import ops as kops
         out = self.page_read_batch([wl], which, backend=backend)
         return out[0] if packed else kops.unpack_bits(out)[0]
 
@@ -159,8 +235,9 @@ class FlashDevice:
 
     def erase_block(self, plane: int, block: int) -> None:
         self.pe_counts[(plane, block)] = self.pe_counts.get((plane, block), 0) + 1
-        for wl in [k for k in self._vth if k[0] == plane and k[1] == block]:
-            del self._vth[wl]
+        stale = [k for k in self._slot_of if k[0] == plane and k[1] == block]
+        self.arena.free([self._slot_of.pop(wl) for wl in stale])
+        for wl in stale:
             self._operands.pop(wl, None)
         # block erase ~ 3.5 ms, energy ~ 2x page program
         self.ledger.add_die(self._die_of_plane(plane), 3500.0,
@@ -169,9 +246,17 @@ class FlashDevice:
 
     def dma_to_controller(self, wl: WordlineKey) -> None:
         """Account a page transfer NAND -> controller on the wordline's channel."""
-        ch = self._channel_of_plane(wl[0])
-        us = self.config.page_bytes / (self.config.channel_bw_gbps * 1e3)  # bytes/GBps -> us
-        self.ledger.add_channel(ch, us)
+        self.dma_to_controller_batch([wl])
+
+    def dma_to_controller_batch(self, wls: List[WordlineKey]) -> None:
+        """Account NAND -> controller transfers for a whole page batch in one
+        ledger call (per-channel busy time aggregated host-side)."""
+        us = self.config.page_bytes / (self.config.channel_bw_gbps * 1e3)
+        per_ch: Dict[int, float] = {}
+        for wl in wls:
+            ch = self._channel_of_plane(wl[0])
+            per_ch[ch] = per_ch.get(ch, 0.0) + us
+        self.ledger.add_channel_batch(per_ch)
 
     def ext_to_host(self, n_bytes: int) -> None:
         self.ledger.add_host(n_bytes / (self.config.host_bw_gbps * 1e3))

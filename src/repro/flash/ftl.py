@@ -30,6 +30,9 @@ class VectorMeta:
     n_bits: int
     pages: List[WordlineKey]          # striped page placement
     role: str                          # 'lsb' | 'msb' (which shared page)
+    #: the co-located page holds zeros (scattered writes) — required for
+    #: in-flash NOT; losing a pairing does NOT zero the stale co-page.
+    zero_co_page: bool = False
 
 
 class FTL:
@@ -92,12 +95,10 @@ class FTL:
         assert len(pages_a) == len(pages_b), "aligned operands must match in size"
         self._invalidate(name_a)
         self._invalidate(name_b)
-        placement: List[WordlineKey] = []
-        for i, (pa, pb_) in enumerate(zip(pages_a, pages_b)):
-            plane = i % self.cfg.planes
-            wl = self.allocate_wordline(plane)
-            self.device.program_shared(wl, pa, pb_)
-            placement.append(wl)
+        placement: List[WordlineKey] = [
+            self.allocate_wordline(i % self.cfg.planes)
+            for i in range(len(pages_a))]
+        self.device.program_shared_batch(placement, pages_a, pages_b)
         self.vectors[name_a] = VectorMeta(name_a, int(bits_a.shape[0]), placement, "lsb")
         self.vectors[name_b] = VectorMeta(name_b, int(bits_b.shape[0]), placement, "msb")
         self._pair_of[name_a] = name_b
@@ -108,17 +109,15 @@ class FTL:
         realignment before MCFlash compute) — stored with all-zero co-page."""
         self._invalidate(name)
         pages = self._paginate(bits)
-        placement = []
-        for i, p in enumerate(pages):
-            plane = i % self.cfg.planes
-            wl = self.allocate_wordline(plane)
-            zero = jnp.zeros_like(p)
-            if role == "lsb":
-                self.device.program_shared(wl, p, zero)
-            else:
-                self.device.program_shared(wl, zero, p)
-            placement.append(wl)
-        self.vectors[name] = VectorMeta(name, int(bits.shape[0]), placement, role)
+        placement = [self.allocate_wordline(i % self.cfg.planes)
+                     for i in range(len(pages))]
+        zeros = [jnp.zeros_like(p) for p in pages]
+        if role == "lsb":
+            self.device.program_shared_batch(placement, pages, zeros)
+        else:
+            self.device.program_shared_batch(placement, zeros, pages)
+        self.vectors[name] = VectorMeta(name, int(bits.shape[0]), placement,
+                                        role, zero_co_page=True)
 
     def align(self, name_a: str, name_b: str) -> str:
         """Copyback-realign two scattered vectors into an aligned pair; returns
@@ -137,6 +136,59 @@ class FTL:
         self._pair_of[name_a] = name_b
         self._pair_of[name_b] = name_a
         return name_a
+
+    # -- executor lowering helpers --------------------------------------------
+    def pair_for_sense(self, names: List[str]) -> Tuple[List[Tuple[str, str]], "str | None"]:
+        """Pair operand names for shared-wordline senses.
+
+        Already-aligned partners pair first (no realignment cost); the rest
+        pair greedily (each costs one copyback realignment, the paper's
+        non-aligned path).  An odd leftover is read out as its own partial.
+        """
+        used: set = set()
+        pairs: List[Tuple[str, str]] = []
+        rest: List[str] = []
+        for i, n in enumerate(names):
+            if i in used:
+                continue
+            partner = self._pair_of.get(n)
+            j = next((k for k in range(i + 1, len(names))
+                      if k not in used and names[k] == partner), None)
+            if j is not None:
+                pairs.append((n, partner))
+                used.update((i, j))
+            else:
+                rest.append(n)
+                used.add(i)
+        while len(rest) >= 2:
+            pairs.append((rest.pop(0), rest.pop(0)))
+        return pairs, (rest[0] if rest else None)
+
+    def ensure_aligned(self, name_a: str, name_b: str) -> None:
+        """Copyback-realign A,B unless they already share wordlines."""
+        if self._pair_of.get(name_a) != name_b:
+            self.align(name_a, name_b)
+
+    def ensure_not_ready(self, name: str, *, backend=None) -> VectorMeta:
+        """Placement for an in-flash NOT: the operand must sit in the MSB page
+        over a zero LSB page (paper Table 1).  Vectors stored any other way
+        are copyback-rewritten once into a NOT-ready placement (cached under
+        a derived name) — the same realignment cost model as scattered
+        operand pairs.  Returns the meta whose pages to sense.
+        """
+        from repro.kernels import ops as kops
+
+        meta = self.vectors[name]
+        if meta.role == "msb" and meta.zero_co_page and name not in self._pair_of:
+            return meta
+        copy = self.derived_not_name(name)
+        if copy not in self.vectors:
+            packed = self.device.page_read_batch(meta.pages, meta.role,
+                                                 backend=backend)
+            self.device.dma_to_controller_batch(meta.pages)
+            bits = kops.unpack_bits(packed.reshape(1, -1))[0][: meta.n_bits]
+            self.write_scattered(copy, bits, role="msb")
+        return self.vectors[copy]
 
     # -- compute (deprecation shims over the session layer) -------------------
     def compute(self, op: str, name_a: str, name_b: str | None = None,

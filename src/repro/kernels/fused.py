@@ -1,0 +1,181 @@
+"""Fused sense→reduce(→popcount) Pallas megakernels.
+
+A k-operand MCFlash chain used to run as one sense kernel per operand pair
+plus a separate ``bitwise_reduce`` — every partial made a round trip through
+HBM.  These kernels fuse the whole chain: the (P, R, C) Vth gather of all P
+pair pages streams tile-by-tile into VMEM, each operand tile is sensed with
+the (shared) read references, and the epilogue threads the sensed bits
+straight into the reduce accumulator — packing (and optionally masked
+popcounting) before anything leaves the chip.  HBM traffic drops from
+``P reads + P writes + P reads + 1 write`` per tile to ``P reads + 1 write``
+(or ``P reads + 128 lanes`` for the popcount form).
+
+All P operands must share one read plan (same references / kind / inverse
+flag) — exactly the homogeneous same-op chains the compiled executor groups;
+heterogeneous graphs fall back to grouped senses + ``bitwise_reduce``.
+
+Read references stay scalar-prefetched *data* (SMEM), so one compiled kernel
+per (P, kind, op) shape serves every reference voltage — mirroring how the
+real chip switches ops purely via SET_FEATURE register writes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+WORD_BITS = 32
+TILE_COLS = LANES * WORD_BITS  # 4096
+ROW_TILE = 8                   # sublane-aligned row tile
+
+
+def _sense_tile(v: jnp.ndarray, refs_ref, kind: str, invert: bool) -> jnp.ndarray:
+    """One (ROW_TILE, TILE_COLS) Vth tile -> boolean sense result."""
+    if kind == "lsb":
+        bits = v < refs_ref[0]
+    elif kind == "msb":
+        bits = (v < refs_ref[0]) | (v > refs_ref[1])
+    elif kind == "sbr":
+        neg = (v < refs_ref[0]) | (v > refs_ref[1])
+        pos = (v < refs_ref[2]) | (v > refs_ref[3])
+        bits = jnp.logical_not(neg ^ pos)
+    else:
+        raise ValueError(kind)
+    return jnp.logical_not(bits) if invert else bits
+
+
+def _combine(acc: jnp.ndarray, nxt: jnp.ndarray, op: str) -> jnp.ndarray:
+    if op == "and":
+        return acc & nxt
+    if op == "or":
+        return acc | nxt
+    if op == "xor":
+        return acc ^ nxt
+    raise ValueError(op)
+
+
+def _pack(bits: jnp.ndarray) -> jnp.ndarray:
+    """(ROW_TILE, TILE_COLS) bool -> (ROW_TILE, LANES) lane-major uint32."""
+    b = bits.astype(jnp.uint32).reshape(bits.shape[0], WORD_BITS, LANES)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)[None, :, None]
+    return jnp.sum(b << shifts, axis=1, dtype=jnp.uint32)
+
+
+def _popcount(v: jnp.ndarray) -> jnp.ndarray:
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((v * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def _sense_reduce_acc(refs_ref, vth_ref, *, n: int, kind: str,
+                      sense_invert: bool, op: str, invert: bool) -> jnp.ndarray:
+    """Shared body: sense all n operand tiles, fold into one bool accumulator."""
+    acc = _sense_tile(vth_ref[0], refs_ref, kind, sense_invert)
+    for k in range(1, n):                       # static unroll over operands
+        acc = _combine(acc, _sense_tile(vth_ref[k], refs_ref, kind,
+                                        sense_invert), op)
+    return jnp.logical_not(acc) if invert else acc
+
+
+def _sense_reduce_kernel(refs_ref, vth_ref, out_ref, *, n, kind,
+                         sense_invert, op, invert):
+    out_ref[...] = _pack(_sense_reduce_acc(
+        refs_ref, vth_ref, n=n, kind=kind, sense_invert=sense_invert,
+        op=op, invert=invert))
+
+
+def _sense_reduce_popcount_kernel(refs_ref, vth_ref, mask_ref, out_ref, *, n,
+                                  kind, sense_invert, op, invert):
+    j = pl.program_id(1)
+    words = _pack(_sense_reduce_acc(
+        refs_ref, vth_ref, n=n, kind=kind, sense_invert=sense_invert,
+        op=op, invert=invert)) & mask_ref[...]
+    pc = _popcount(words)                       # (ROW_TILE, LANES)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = pc
+
+    @pl.when(j > 0)
+    def _acc():
+        out_ref[...] += pc
+
+
+def _check_shapes(vth: jnp.ndarray) -> tuple[int, int, int]:
+    n, r, c = vth.shape
+    assert n >= 1, "need at least one operand"
+    assert r % ROW_TILE == 0, f"rows {r} must be a multiple of {ROW_TILE}"
+    assert c % TILE_COLS == 0, f"cols {c} must be a multiple of {TILE_COLS}"
+    return n, r, c
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "sense_invert", "op",
+                                             "invert", "interpret"))
+def sense_reduce(vth: jnp.ndarray, refs: jnp.ndarray, *, kind: str,
+                 sense_invert: bool, op: str, invert: bool = False,
+                 interpret: bool = True) -> jnp.ndarray:
+    """Fused chain: (N, R, C) Vth -> (R, C//32) packed op-reduction.
+
+    Each of the N operands is sensed with the same ``refs``/``kind`` (and
+    per-sense inverse-read when ``sense_invert``), folded with ``op``, with
+    an optional final inversion — all inside one kernel.
+    """
+    n, r, c = _check_shapes(vth)
+    refs = jnp.asarray(refs, jnp.float32).reshape(4)
+    grid = (r // ROW_TILE, c // TILE_COLS)
+    return pl.pallas_call(
+        functools.partial(_sense_reduce_kernel, n=n, kind=kind,
+                          sense_invert=sense_invert, op=op, invert=invert),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((n, ROW_TILE, TILE_COLS),
+                             lambda i, j, refs: (0, i, j)),
+            ],
+            out_specs=pl.BlockSpec((ROW_TILE, LANES), lambda i, j, refs: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((r, c // WORD_BITS), jnp.uint32),
+        interpret=interpret,
+    )(refs, vth)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "sense_invert", "op",
+                                             "invert", "interpret"))
+def sense_reduce_popcount(vth: jnp.ndarray, refs: jnp.ndarray,
+                          mask: jnp.ndarray, *, kind: str, sense_invert: bool,
+                          op: str, invert: bool = False,
+                          interpret: bool = True) -> jnp.ndarray:
+    """Fused chain + popcount: (N, R, C) Vth -> (R,) int32 bit counts.
+
+    ``mask`` is (R, C//32) packed uint32 ANDed into the reduced words before
+    counting (zeroes the page-padding tail, which inverse-read ops would
+    otherwise count as ones).  Only the counts leave the kernel — the packed
+    result never round-trips through HBM.
+    """
+    n, r, c = _check_shapes(vth)
+    assert mask.shape == (r, c // WORD_BITS), mask.shape
+    refs = jnp.asarray(refs, jnp.float32).reshape(4)
+    grid = (r // ROW_TILE, c // TILE_COLS)
+    lanes = pl.pallas_call(
+        functools.partial(_sense_reduce_popcount_kernel, n=n, kind=kind,
+                          sense_invert=sense_invert, op=op, invert=invert),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((n, ROW_TILE, TILE_COLS),
+                             lambda i, j, refs: (0, i, j)),
+                pl.BlockSpec((ROW_TILE, LANES), lambda i, j, refs: (i, j)),
+            ],
+            out_specs=pl.BlockSpec((ROW_TILE, LANES), lambda i, j, refs: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((r, LANES), jnp.int32),
+        interpret=interpret,
+    )(refs, vth, mask)
+    return jnp.sum(lanes, axis=-1, dtype=jnp.int32)

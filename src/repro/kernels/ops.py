@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import bitops as _bitops
+from repro.kernels import fused as _fused
 from repro.kernels import mlc_sense as _mlc
 from repro.kernels import popcount as _pop
 from repro.kernels import ref as kernel_ref
@@ -48,6 +49,47 @@ def sense_plan(vth: jnp.ndarray, plan, *, interpret: bool | None = None) -> jnp.
     refs = list(plan.refs) + [0.0] * (4 - len(plan.refs))
     return mlc_sense(vth, refs, kind=plan.kind, invert=plan.uses_inverse,
                      interpret=interpret)
+
+
+def _plan_parts(plan) -> tuple[list, str, bool]:
+    refs = list(plan.refs) + [0.0] * (4 - len(plan.refs))
+    return refs, plan.kind, plan.uses_inverse
+
+
+def sense_reduce_plan(vth: jnp.ndarray, plan, *, op: str, invert: bool = False,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """Fused megakernel: (N, R, C) same-plan Vth -> (R, C//32) packed
+    op-reduction, without round-tripping per-operand partials through HBM."""
+    if interpret is None:
+        interpret = _default_interpret()
+    refs, kind, sense_invert = _plan_parts(plan)
+    n, r, c = vth.shape
+    pad_r = (-r) % ROW_TILE
+    if pad_r:
+        vth = jnp.pad(vth, ((0, 0), (0, pad_r), (0, 0)))
+    out = _fused.sense_reduce(vth, jnp.asarray(refs, jnp.float32), kind=kind,
+                              sense_invert=sense_invert, op=op, invert=invert,
+                              interpret=interpret)
+    return out[:r]
+
+
+def sense_reduce_popcount_plan(vth: jnp.ndarray, plan, mask: jnp.ndarray, *,
+                               op: str, invert: bool = False,
+                               interpret: bool | None = None) -> jnp.ndarray:
+    """Fused megakernel + masked popcount: (N, R, C) Vth -> (R,) int32."""
+    if interpret is None:
+        interpret = _default_interpret()
+    refs, kind, sense_invert = _plan_parts(plan)
+    n, r, c = vth.shape
+    pad_r = (-r) % ROW_TILE
+    if pad_r:
+        vth = jnp.pad(vth, ((0, 0), (0, pad_r), (0, 0)))
+        mask = jnp.pad(mask, ((0, pad_r), (0, 0)))   # zero mask counts nothing
+    out = _fused.sense_reduce_popcount(vth, jnp.asarray(refs, jnp.float32),
+                                       mask, kind=kind,
+                                       sense_invert=sense_invert, op=op,
+                                       invert=invert, interpret=interpret)
+    return out[:r]
 
 
 def bitwise_reduce(stack: jnp.ndarray, *, op: str, invert: bool = False,

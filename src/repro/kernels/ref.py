@@ -80,6 +80,29 @@ def bitwise_reduce(stack: jnp.ndarray, op: str, invert: bool = False) -> jnp.nda
     return acc
 
 
+def sense_reduce(vth: jnp.ndarray, refs: jnp.ndarray, kind: str,
+                 sense_invert: bool, op: str, invert: bool = False) -> jnp.ndarray:
+    """Oracle for the fused sense->reduce megakernel.
+
+    vth: (N, R, C) float32 — N same-plan operands of R pages each.  Each
+    operand senses via :func:`mlc_sense` semantics (per-sense inverse read
+    when ``sense_invert``), folds with ``op``, optional final inversion.
+    Returns packed uint32 (R, C // 32).
+    """
+    n, r, c = vth.shape
+    packed = mlc_sense(vth.reshape(n * r, c), refs, kind, invert=sense_invert)
+    return bitwise_reduce(packed.reshape(n, r, -1), op, invert)
+
+
+def sense_reduce_popcount(vth: jnp.ndarray, refs: jnp.ndarray,
+                          mask: jnp.ndarray, kind: str, sense_invert: bool,
+                          op: str, invert: bool = False) -> jnp.ndarray:
+    """Oracle for the fused sense->reduce->popcount megakernel: (R,) counts
+    of the masked reduction (mask zeroes page-padding bits)."""
+    words = sense_reduce(vth, refs, kind, sense_invert, op, invert) & mask
+    return popcount_rows(words)
+
+
 def popcount_words(words: jnp.ndarray) -> jnp.ndarray:
     """Per-word popcount of uint32 (SWAR bit tricks)."""
     v = words.astype(jnp.uint32)

@@ -1,0 +1,272 @@
+"""Compiled DAG executor: sim/pallas parity on randomized DAGs, executable
+caching (0 retraces), whole-graph sense batching, fused megakernels, the
+Vth arena, and batched ledger accounting."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ComputeSession, PlanCache
+from repro.core.vth_model import get_chip_model
+from repro.flash.arena import VthArena
+from repro.flash.geometry import SSDConfig
+from repro.kernels import ops as kops
+from repro.kernels import ref as kernel_ref
+from repro.testing.hypothesis_compat import given, settings, st
+
+SMALL = SSDConfig(page_kb=1)           # 8192-bit pages keep interpret mode fast
+
+_OPS = {"and": np.bitwise_and, "or": np.bitwise_or, "xor": np.bitwise_xor}
+
+
+def _session(backend, seed=0):
+    return ComputeSession(config=SMALL, backend=backend, seed=seed)
+
+
+def _random_expr(rng, vecs, bits, depth=0):
+    """Random expression tree + its numpy oracle value."""
+    if depth >= 3 or rng.random() < 0.35:
+        i = int(rng.integers(0, len(vecs)))
+        return vecs[i], bits[i]
+    roll = rng.random()
+    if roll < 0.15:
+        e, o = _random_expr(rng, vecs, bits, depth + 1)
+        return ~e, 1 - o
+    op = ("and", "or", "xor")[int(rng.integers(0, 3))]
+    k = int(rng.integers(2, 5))
+    parts = [_random_expr(rng, vecs, bits, depth + 1) for _ in range(k)]
+    expr, oracle = parts[0]
+    for e, o in parts[1:]:
+        expr = getattr(expr, f"__{op}__")(e)
+        oracle = _OPS[op](oracle, o)
+    return expr, oracle
+
+
+@settings(max_examples=10)
+@given(st.integers(0, 2**31 - 1))
+def test_randomized_dags_backend_parity(seed):
+    """Random DAGs produce identical packed words on sim and pallas, both
+    matching the host oracle (materialize + popcount)."""
+    rng = np.random.default_rng(seed)
+    n = SMALL.page_bits
+    bits = [(rng.random(n) < 0.5).astype(np.uint8) for _ in range(6)]
+    expr_rng_seed = int(rng.integers(0, 2**31))
+    results = {}
+    for backend in ("sim", "pallas"):
+        sess = _session(backend, seed=seed % 7)
+        vecs = []
+        for i in range(0, 6, 2):
+            a, b = sess.write_pair(f"v{i}", bits[i], f"v{i+1}", bits[i + 1])
+            vecs += [a, b]
+        expr, oracle = _random_expr(np.random.default_rng(expr_rng_seed),
+                                    vecs, bits)
+        packed = np.asarray(sess.materialize(expr))
+        got = np.asarray(kops.unpack_bits(jnp.asarray(packed).reshape(1, -1))[0][:n])
+        np.testing.assert_array_equal(got, oracle)
+        assert sess.popcount(expr) == int(np.sum(oracle))
+        results[backend] = packed
+    np.testing.assert_array_equal(results["sim"], results["pallas"])
+
+
+@pytest.mark.parametrize("n_leaves", [2, 4, 5, 9, 16])
+def test_chain_issues_grouped_senses_and_one_combine(rng, n_leaves):
+    """An N-leaf associative chain lowers to exactly ceil(N/2) logical senses
+    grouped into <= 2 batched kernel calls + at most one fused combine."""
+    sess = _session("pallas")
+    n = SMALL.page_bits
+    bits = [(rng.random(n) < 0.5).astype(np.uint8) for _ in range(n_leaves)]
+    vecs = []
+    for i in range(0, n_leaves - 1, 2):
+        a, b = sess.write_pair(f"v{i}", bits[i], f"v{i+1}", bits[i + 1])
+        vecs += [a, b]
+    if n_leaves % 2:
+        vecs.append(sess.write(f"v{n_leaves-1}", bits[-1]))
+    expr = sess.chain("and", vecs)
+    got = np.asarray(sess.materialize(expr, unpacked=True))
+    np.testing.assert_array_equal(got, np.bitwise_and.reduce(bits))
+    assert sess.sense_items == -(-n_leaves // 2)           # ceil(N/2)
+    assert sess.in_flash_senses == n_leaves // 2           # pair senses only
+    assert sess.sense_batches <= 2
+    assert sess.fused_reduce_calls == (1 if n_leaves > 2 else 0)
+    if n_leaves % 2 == 0 and n_leaves > 2:
+        # homogeneous chain: ONE fused sense->reduce megakernel call
+        assert sess.sense_batches == 1
+        assert sess.megakernel_calls == 1
+
+
+def test_repeated_materialize_hits_cached_executable(rng):
+    """Second materialize of the same DAG shape: executable-cache hit, zero
+    retraces, and no extra read-plan compilation."""
+    sess = _session("pallas")
+    n = SMALL.page_bits
+    bits = [(rng.random(n) < 0.5).astype(np.uint8) for _ in range(4)]
+    a, b = sess.write_pair("a", bits[0], "b", bits[1])
+    c, d = sess.write_pair("c", bits[2], "d", bits[3])
+    expr = (a & b) ^ (c & d)
+    want = (bits[0] & bits[1]) ^ (bits[2] & bits[3])
+    for i in range(3):
+        got = np.asarray(sess.materialize(expr, unpacked=True))
+        np.testing.assert_array_equal(got, want)
+    stats = sess.executor.stats()
+    assert stats["misses"] == 1
+    assert stats["hits"] == 2
+    assert stats["traces"] == 1                            # 0 retraces
+    # same SHAPE with different leaves reuses the executable too
+    e, f = sess.write_pair("e", bits[1], "f", bits[2])
+    got = np.asarray(sess.materialize((a & b) ^ (e & f), unpacked=True))
+    np.testing.assert_array_equal(got, (bits[0] & bits[1]) ^ (bits[1] & bits[2]))
+    assert sess.executor.stats() == {**stats, "hits": 3}
+    # arena growth must NOT retrace cached executables (gathers run outside
+    # the jitted program, so input shapes depend only on the plan signature)
+    grows0 = sess.device.arena.grows
+    i = 0
+    while sess.device.arena.grows == grows0:
+        sess.write_pair(f"g{i}", bits[0], f"h{i}", bits[1])
+        i += 1
+    got = np.asarray(sess.materialize(expr, unpacked=True))
+    np.testing.assert_array_equal(got, want)
+    assert sess.executor.stats()["traces"] == 1
+
+
+def test_whole_graph_same_plan_senses_batch_once(rng):
+    """Same-plan senses in DIFFERENT combine nodes run as one batched kernel
+    call: (a&b) ^ (c&d) -> one AND group + one XOR combine."""
+    sess = _session("pallas")
+    n = SMALL.page_bits
+    bits = [(rng.random(n) < 0.5).astype(np.uint8) for _ in range(4)]
+    a, b = sess.write_pair("a", bits[0], "b", bits[1])
+    c, d = sess.write_pair("c", bits[2], "d", bits[3])
+    sess.materialize((a & b) ^ (c & d))
+    assert sess.in_flash_senses == 2
+    assert sess.sense_batches == 1                         # one AND group
+    assert sess.fused_reduce_calls == 1                    # one XOR combine
+
+
+def test_popcount_ledger_accounts_count_not_page(rng):
+    """On-controller popcount ships 4 bytes to the host, not the packed
+    vector; materialize(to_host=True) still accounts the full transfer."""
+    sess = _session("pallas")
+    n = SMALL.page_bits
+    a_bits, b_bits = ((rng.random(n) < 0.5).astype(np.uint8) for _ in range(2))
+    a, b = sess.write_pair("a", a_bits, "b", b_bits)
+    host_bw = sess.device.config.host_bw_gbps * 1e3        # bytes/us
+    before = sess.ledger.host_busy_us
+    assert sess.popcount(a & b) == int(np.sum(a_bits & b_bits))
+    assert sess.ledger.host_busy_us - before == pytest.approx(4 / host_bw)
+    before = sess.ledger.host_busy_us
+    packed = sess.materialize(a & b)
+    words = int(packed.shape[-1])
+    assert sess.ledger.host_busy_us - before == pytest.approx(4 * words / host_bw)
+
+
+def test_popcount_fuses_into_root_megakernel(rng):
+    """A homogeneous chain popcount runs as ONE sense->reduce->popcount
+    megakernel — and stays exact on partial pages (mask in-kernel)."""
+    for n in (SMALL.page_bits, 1000):
+        sess = _session("pallas")
+        bits = [(rng.random(n) < 0.5).astype(np.uint8) for _ in range(4)]
+        a, b = sess.write_pair(f"a{n}", bits[0], f"b{n}", bits[1])
+        c, d = sess.write_pair(f"c{n}", bits[2], f"d{n}", bits[3])
+        expr = ~(a & b & c & d)                            # inverse-read: pad -> 1s
+        want = int(np.sum(1 - np.bitwise_and.reduce(bits)))
+        assert sess.popcount(expr) == want
+        assert sess.megakernel_calls == 1
+        assert sess.sense_batches == 1
+
+
+@pytest.mark.parametrize("op,invert", [("and", False), ("or", False),
+                                       ("xor", True)])
+def test_fused_kernel_matches_reference(rng, op, invert):
+    """kernels.fused sense_reduce(+popcount) == composed pure-jnp oracles."""
+    plans = PlanCache()
+    chip = get_chip_model()
+    plan = plans.get(op if not invert else "xor", chip)
+    vth = jnp.asarray(rng.normal(2.0, 2.0, (3, 2, 4096)), jnp.float32)
+    mask = jnp.asarray(
+        rng.integers(0, 2**32, (2, 128), dtype=np.uint64).astype(np.uint32))
+    got = kops.sense_reduce_plan(vth, plan, op=op, invert=invert)
+    refs = jnp.asarray(list(plan.refs) + [0.0] * (4 - len(plan.refs)),
+                       jnp.float32)
+    want = kernel_ref.sense_reduce(vth, refs, plan.kind, plan.uses_inverse,
+                                   op, invert)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    got_pc = kops.sense_reduce_popcount_plan(vth, plan, mask, op=op,
+                                             invert=invert)
+    want_pc = kernel_ref.sense_reduce_popcount(vth, refs, mask, plan.kind,
+                                               plan.uses_inverse, op, invert)
+    np.testing.assert_array_equal(np.asarray(got_pc), np.asarray(want_pc))
+
+
+def test_vth_arena_alloc_free_grow():
+    arena = VthArena(page_bits=256, init_slots=2)
+    s0 = arena.alloc(2)
+    assert arena.used == 2 and arena.grows == 0
+    s1 = arena.alloc(3)                                    # forces a grow
+    assert arena.grows == 1 and arena.capacity >= 5
+    rows = np.arange(5 * 256, dtype=np.float32).reshape(5, 256)
+    arena.write(s0 + s1, rows)
+    np.testing.assert_array_equal(np.asarray(arena.gather(s0 + s1)), rows)
+    arena.free(s0)
+    assert arena.used == 3
+    s2 = arena.alloc(2)                                    # recycles freed slots
+    assert set(s2) == set(s0) and arena.grows == 1
+    # non-contiguous gather keeps row identity
+    np.testing.assert_array_equal(np.asarray(arena.gather([s1[2], s1[0]])),
+                                  rows[[4, 2]])
+
+
+def test_device_senses_read_from_arena(rng):
+    """Device reads after erase + rewrite hit the right arena rows."""
+    from repro.flash.device import FlashDevice
+    dev = FlashDevice(config=SMALL, seed=3)
+    n = SMALL.page_bits
+    wl_a, wl_b = (0, 0, 0), (1, 0, 0)
+    bits = [(rng.random(n) < 0.5).astype(np.uint8) for _ in range(4)]
+    dev.program_shared(wl_a, jnp.asarray(bits[0]), jnp.asarray(bits[1]))
+    dev.program_shared(wl_b, jnp.asarray(bits[2]), jnp.asarray(bits[3]))
+    got = np.asarray(dev.mcflash_read(wl_a, "and", packed=False))
+    np.testing.assert_array_equal(got, bits[0] & bits[1])
+    dev.erase_block(0, 0)                                  # frees wl_a's slot
+    dev.program_shared(wl_a, jnp.asarray(bits[3]), jnp.asarray(bits[0]))
+    got = np.asarray(dev.mcflash_read_batch([wl_a, wl_b], "or"))
+    want = [bits[3] | bits[0], bits[2] | bits[3]]
+    for row, w in zip(got, want):
+        np.testing.assert_array_equal(
+            np.asarray(kops.unpack_bits(row.reshape(1, -1))[0]), w)
+
+
+def test_batched_ledger_matches_per_page_accounting(rng):
+    """add_die_batch/dma batch entries book the same totals the per-page
+    loops used to."""
+    from repro.api import Ledger
+    led_a, led_b = Ledger(), Ledger()
+    per_die = {0: 100.0, 1: 40.0}
+    led_a.add_die_batch(per_die, uj=6.0, commands=3)
+    for die, us in ((0, 60.0), (0, 40.0), (1, 40.0)):
+        led_b.add_die(die, us, 2.0)
+    assert led_a.summary() == led_b.summary()
+    led_a.add_channel_batch({0: 10.0, 2: 5.0})
+    led_b.add_channel(0, 10.0)
+    led_b.add_channel(2, 5.0)
+    assert led_a.summary() == led_b.summary()
+    assert led_a.channel_busy_us == led_b.channel_busy_us
+
+
+def test_sim_executor_never_enters_pallas(rng, monkeypatch):
+    """The executor on backend='sim' stays pure-jnp even on the fused
+    megakernel and popcount paths."""
+    import jax.experimental.pallas as pl
+
+    def _boom(*a, **kw):
+        raise AssertionError("Pallas kernel invoked on the sim backend")
+
+    monkeypatch.setattr(pl, "pallas_call", _boom)
+    sess = _session("sim")
+    n = SMALL.page_bits
+    bits = [(rng.random(n) < 0.5).astype(np.uint8) for _ in range(4)]
+    a, b = sess.write_pair("a", bits[0], "b", bits[1])
+    c, d = sess.write_pair("c", bits[2], "d", bits[3])
+    expr = a & b & c & d
+    got = np.asarray(sess.materialize(expr, unpacked=True))
+    np.testing.assert_array_equal(got, np.bitwise_and.reduce(bits))
+    assert sess.megakernel_calls == 1
+    assert sess.popcount(expr) == int(np.sum(np.bitwise_and.reduce(bits)))
