@@ -1,0 +1,82 @@
+"""CI perf smoke check: compare a BENCH_*.json entry against the committed
+baseline.
+
+The quick-mode benchmarks double as regression tripwires: structural
+regressions (lost fusion, broken caching) already fail via embedded
+assertions, and this check additionally flags a wall-clock blow-up of the
+end-to-end compiled-executor path.  Medians on shared CI runners are noisy,
+so the default tolerance is generous (+25% over baseline, per the committed
+``benchmarks/baselines/*.json``) — it catches "accidentally 2x slower",
+not single-digit drift.
+
+Usage (CI)::
+
+    python -m benchmarks.kernel_throughput --quick
+    python -m benchmarks.check_regression \
+        --bench BENCH_kernels.json \
+        --baseline benchmarks/baselines/kernels_quick.json \
+        --key executor_chain16_materialize --max-regression 0.25
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from benchmarks.common import REPO_ROOT
+
+
+def _load(path: str) -> dict:
+    if not os.path.isabs(path):
+        path = os.path.join(REPO_ROOT, path)
+    with open(path) as f:
+        data = json.load(f)
+    return {r["op"]: r for r in data.get("results", [])}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench", default="BENCH_kernels.json",
+                    help="freshly-written benchmark JSON (repo-relative)")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/kernels_quick.json",
+                    help="committed baseline JSON (repo-relative)")
+    ap.add_argument("--key", action="append", dest="keys",
+                    default=None, help="op name(s) to check (repeatable); "
+                    "default: every op present in the baseline")
+    ap.add_argument("--max-regression", type=float, default=0.25,
+                    help="allowed fractional slowdown vs baseline (0.25 = +25%%)")
+    args = ap.parse_args(argv)
+
+    bench = _load(args.bench)
+    baseline = _load(args.baseline)
+    keys = args.keys or sorted(baseline)
+    failures = []
+    for key in keys:
+        base = baseline.get(key)
+        got = bench.get(key)
+        if base is None:
+            print(f"SKIP {key}: no committed baseline")
+            continue
+        if got is None:
+            failures.append(f"{key}: missing from {args.bench}")
+            continue
+        limit = base["us"] * (1.0 + args.max_regression)
+        verdict = "OK" if got["us"] <= limit else "REGRESSION"
+        print(f"{verdict} {key}: {got['us']:.2f} us vs baseline "
+              f"{base['us']:.2f} us (limit {limit:.2f})")
+        if got["us"] > limit:
+            failures.append(
+                f"{key}: {got['us']:.2f} us > {limit:.2f} us "
+                f"(baseline {base['us']:.2f} +{args.max_regression:.0%})")
+    if failures:
+        print("\nperf regression check FAILED:\n  " + "\n  ".join(failures),
+              file=sys.stderr)
+        return 1
+    print("perf regression check passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

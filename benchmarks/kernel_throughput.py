@@ -81,6 +81,15 @@ def _bench_executor(quick: bool) -> None:
          f"traces={stats['executor']['traces']}")
     us = timeit(lambda: sess.popcount(expr), iters=5 if quick else 20)
     emit("executor_chain16_popcount", us, f"bits={n}")
+    # die topology: the 8 round-robined pairs sense in parallel across dies,
+    # so the schedule's die-parallel time sits below the serial single-die sum
+    led = sess.ledger
+    speedup = led.serial_us() / max(led.die_step_us, 1e-9)
+    emit("executor_chain16_die_parallel", led.die_step_us,
+         f"serial_us={led.serial_us():.1f};die_parallel_speedup={speedup:.2f};"
+         f"concurrent_dies={stats['max_concurrent_dies']};"
+         f"waves={stats['sense_waves']};shards={stats['arena_shards']}")
+    assert led.die_step_us <= led.serial_us()
 
 
 def main(quick: bool = True) -> None:

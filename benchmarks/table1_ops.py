@@ -55,9 +55,16 @@ def main(quick: bool = True) -> None:
     assert stats["misses"] <= len(encoding.ALL_OPS), stats
     ex = sess.stats()["executor"]
     emit("table1_exec_cache", 0.0,
-         f"hits={ex['hits']};misses={ex['misses']};traces={ex['traces']}")
+         f"hits={ex['hits']};misses={ex['misses']};traces={ex['traces']};"
+         f"evictions={ex['evictions']}")
     # repeat timings replayed cached executables: one trace per DAG shape
     assert ex["traces"] == ex["misses"], ex
+    led = sess.ledger
+    emit("table1_die_parallel", led.die_step_us,
+         f"serial_us={led.serial_us():.1f};"
+         f"max_parallel_dies={led.max_parallel_dies};"
+         f"arena_shards={sess.device.arena.n_shards}")
+    assert led.die_step_us <= led.serial_us()
     emit("table1_total", (time.perf_counter() - t0) * 1e6, f"quick={int(quick)}")
     write_json("BENCH_kernels.json")
 

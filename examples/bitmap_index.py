@@ -34,7 +34,7 @@ print(f"active-every-day users (in-flash AND over {days} days): "
 
 stats = bf.session.stats()
 print(f"flash commands issued: {stats['ledger']['commands']}; "
-      f"die time {bf.device.ledger.makespan_us:.0f} us; "
+      f"die-parallel time {bf.device.ledger.makespan_us():.0f} us (serial {bf.device.ledger.serial_us():.0f} us); "
       f"senses {stats['in_flash_senses']}, fused combines {stats['fused_reduce_calls']}, "
       f"plan cache {stats['plan_cache']}")
 

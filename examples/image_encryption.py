@@ -33,7 +33,8 @@ np.testing.assert_array_equal(plain, bits)
 rec = np.packbits(plain).reshape(128, 128)
 np.testing.assert_array_equal(rec, img)
 print("round-trip in-flash XOR encryption: bit-exact OK")
-print(f"simulated die time: {sess.ledger.makespan_us:.0f} us, "
+print(f"simulated die time: {sess.ledger.makespan_us():.0f} us "
+      f"(serial {sess.ledger.serial_us():.0f} us), "
       f"energy {sess.ledger.energy_uj:.0f} uJ, "
       f"plan cache {sess.stats()['plan_cache']}")
 

@@ -1,9 +1,8 @@
-"""Compiled DAG executor: whole-graph sense batching + cached executables.
+"""Compiled DAG executor: topology-aware schedule + cached executables.
 
 The session layer used to evaluate the canonical op DAG eagerly — one
 backend sense call per operand pair, a controller combine per node, and
-per-page Python accounting loops — so a 16-operand query paid ~10 kernel
-dispatches plus host round-trips.  This module lowers a canonical
+per-page Python accounting loops.  This module lowers a canonical
 (:func:`repro.api.graph.simplify`-ed) DAG into a static :class:`ExecPlan`
 instead:
 
@@ -13,19 +12,30 @@ instead:
 2. **Fusion** rewrites any combine whose inputs are single-use, same-plan
    senses into one fused ``sense_reduce`` megakernel call (sense epilogue
    feeds the reduce accumulator — no partials round-trip through HBM; with
-   a popcount root, only the counts leave the kernel).
-3. **Grouping** buckets every remaining sense by :class:`ReadPlan`, so all
-   same-plan senses across the *whole graph* run in ONE batched kernel call
-   (one row-gather from the device-resident Vth arena, one SET_FEATURE).
-4. **Caching**: the jitted executable is cached in an
+   a popcount root, only the counts leave the kernel).  Over-large fused
+   chains split into VMEM-budgeted tiled passes at execution time
+   (``operands x ROW_TILE x TILE_COLS x 4 B`` must fit the budget).
+3. **Grouping** buckets every remaining sense by (:class:`ReadPlan`, die),
+   so all same-plan senses *on one die* run in ONE batched kernel call —
+   one row-gather from that die's Vth arena shard, one SET_FEATURE.
+4. **Scheduling** packs the per-die groups and fused megakernels into
+   topological *waves*: units on different dies share a wave (they dispatch
+   concurrently — one parallel ledger step per wave), units contending for
+   a die serialize across waves, and combine steps interleave with
+   still-pending senses the moment their inputs are ready instead of
+   running in strict post-order.
+5. **Caching**: the jitted executable is cached in the device-shared
    :class:`~repro.api.plan_cache.ExecutableCache` keyed on the lowered plan
-   signature (DAG shape + page counts + backend), so a repeated materialize
-   of the same expression shape skips lowering-to-jaxpr and retracing
-   entirely — arena row indices and the padding mask are runtime inputs.
+   signature (DAG shape + page counts + *normalized* die topology +
+   backend), so a repeated materialize of the same expression shape skips
+   lowering-to-jaxpr and retracing entirely — arena shard gathers and the
+   padding mask are runtime inputs, and physical die ids are normalized so
+   isomorphic layouts share one executable.
 
-Ledger accounting is batched alongside: one ``account_*_batch`` plus one
-``dma_to_controller_batch`` per sense group instead of O(pages) Python-loop
-entries.
+Ledger accounting is wave-batched: each schedule wave books ONE parallel
+``add_die_batch`` step (concurrent dies overlap, so the ledger's
+die-parallel ``makespan_us()`` reflects the actual schedule) plus one
+``add_channel_batch`` for its NAND->controller transfers.
 """
 from __future__ import annotations
 
@@ -36,12 +46,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.api.graph import ASSOCIATIVE, BASE_OF, Leaf, Node, Op
-from repro.api.plan_cache import ExecutableCache
 from repro.core.mcflash import ReadPlan
+from repro.kernels.fused import ROW_TILE, TILE_COLS
 
-__all__ = ["ExecPlan", "Executor"]
+__all__ = ["ExecPlan", "Executor", "Wave", "DEFAULT_VMEM_BUDGET_BYTES"]
 
 WordlineKey = Tuple[int, int, int]
+
+#: VMEM streamed per fused-megakernel operand tile (float32 Vth)
+OPERAND_TILE_BYTES = ROW_TILE * TILE_COLS * 4
+#: default budget for operand tiles resident in VMEM during a fused pass
+DEFAULT_VMEM_BUDGET_BYTES = 4 * 1024 * 1024
 
 
 @dataclasses.dataclass
@@ -54,10 +69,12 @@ class SenseItem:
     op_label: str                 # timing/energy op label
     is_mcflash: bool              # MCFlash sense (True) vs default-ref read
     which: Optional[str] = None   # page-read role when not is_mcflash
+    dies: Tuple[int, ...] = ()    # dies this item's pages live on (sorted)
 
     @property
     def plan_key(self) -> tuple:
-        return (self.plan, self.op_label, self.is_mcflash, self.which)
+        return (self.plan, self.op_label, self.is_mcflash, self.which,
+                self.dies)
 
 
 @dataclasses.dataclass
@@ -68,6 +85,7 @@ class FusedSpec:
     wls: List[WordlineKey]        # n_operands * n_pages, operand-major
     n_operands: int
     n_pages: int
+    dies: Tuple[int, ...] = ()    # dies spanned by the operand pages (sorted)
 
 
 @dataclasses.dataclass
@@ -81,11 +99,13 @@ class CombineStep:
 
 @dataclasses.dataclass
 class SenseGroup:
-    """All non-fused senses sharing one ReadPlan: ONE batched kernel call."""
+    """All non-fused senses sharing one (ReadPlan, die): ONE batched kernel
+    call gathering ONE arena shard."""
     plan: ReadPlan
     op_label: str
     is_mcflash: bool
     which: Optional[str]
+    dies: Tuple[int, ...]
     items: List[SenseItem]
 
     @property
@@ -102,27 +122,51 @@ class SenseGroup:
 
 
 @dataclasses.dataclass
+class Wave:
+    """One schedule step: the listed units occupy disjoint dies, so they
+    dispatch concurrently; the listed combines' inputs are all ready by the
+    end of this wave (they interleave with later waves' senses)."""
+    groups: List[int] = dataclasses.field(default_factory=list)   # -> plan.groups
+    fused: List[int] = dataclasses.field(default_factory=list)    # -> plan.steps
+    combines: List[int] = dataclasses.field(default_factory=list)  # -> plan.steps
+
+
+@dataclasses.dataclass
 class ExecPlan:
     """Static, signature-keyed execution schedule for one canonical DAG."""
     groups: List[SenseGroup]
     steps: List[CombineStep]
+    waves: List[Wave]
     root: int
     out_pages: int                # pages in the root partial
     out_words: int                # packed words in the root partial
     senses: int                   # logical in-flash senses (paper semantics)
     items: int                    # all sense/read items incl. fused operands
+    concurrent_dies: int          # max dies busy in one wave
 
     def signature(self, backend_name: str) -> tuple:
         """Hashable shape of the plan: everything the executable closes over
-        (structure, plans, page counts) minus the runtime inputs (arena rows,
-        mask) — the ExecutableCache key."""
+        (structure, plans, page counts, die *topology*) minus the runtime
+        inputs (arena shard gathers, mask) — the ExecutableCache key.
+
+        Physical die ids are normalized to first-appearance order: the
+        executable's wave structure depends only on which units *share* a
+        die, so isomorphic layouts (a&b on dies {0,1} vs {0,2}) replay one
+        executable.
+        """
+        remap: Dict[int, int] = {}
+
+        def norm(dies: Tuple[int, ...]) -> Tuple[int, ...]:
+            return tuple(remap.setdefault(d, len(remap)) for d in dies)
+
         return (
             backend_name,
-            tuple((g.plan, g.op_label,
+            tuple((g.plan, g.op_label, norm(g.dies),
                    tuple((it.pid, len(it.wls)) for it in g.items))
                   for g in self.groups),
             tuple((st.out, st.args, st.op, st.invert,
-                   (st.fused.plan, st.fused.n_operands, st.fused.n_pages)
+                   (st.fused.plan, st.fused.n_operands, st.fused.n_pages,
+                    norm(st.fused.dies))
                    if st.fused else None)
                   for st in self.steps),
             self.root, self.out_words,
@@ -135,6 +179,7 @@ class _Lowering:
     def __init__(self, session):
         self.session = session
         self.ftl = session.ftl
+        self.device = session.device
         self.items: List[SenseItem] = []
         self.steps: List[CombineStep] = []
         self.pages_of: Dict[int, int] = {}    # pid -> page count
@@ -146,11 +191,14 @@ class _Lowering:
         self.pages_of[pid] = n_pages
         return pid
 
+    def _dies_of(self, wls: List[WordlineKey]) -> Tuple[int, ...]:
+        return tuple(sorted({self.device.die_of_plane(p) for p, _, _ in wls}))
+
     def _item(self, name: str, wls: List[WordlineKey], plan: ReadPlan,
               op_label: str, is_mcflash: bool, which: str | None = None) -> int:
         pid = self._pid(len(wls))
         self.items.append(SenseItem(pid, name, list(wls), plan, op_label,
-                                    is_mcflash, which))
+                                    is_mcflash, which, self._dies_of(wls)))
         return pid
 
     def _read_leaf(self, name: str) -> int:
@@ -224,20 +272,29 @@ class _Lowering:
             stack.pop()
             memo[n] = self._lower_node(n, memo)
         return self._finish(memo[root])
+
     def _finish(self, root_pid: int) -> ExecPlan:
         self._fuse(root_pid)
         groups = self._group()
+        waves, concurrent = self._schedule(groups)
         fused_ops = sum(st.fused.n_operands for st in self.steps
                         if st.fused is not None)
         senses = sum(1 for it in self.items if it.is_mcflash) + fused_ops
-        return ExecPlan(groups=groups, steps=self.steps, root=root_pid,
+        return ExecPlan(groups=groups, steps=self.steps, waves=waves,
+                        root=root_pid,
                         out_pages=self.pages_of[root_pid],
                         out_words=self.pages_of[root_pid]
                         * (self.ftl.cfg.page_bits // 32),
-                        senses=senses, items=len(self.items) + fused_ops)
+                        senses=senses, items=len(self.items) + fused_ops,
+                        concurrent_dies=concurrent)
 
     def _fuse(self, root: int) -> None:
-        """Fold combines over single-use, same-plan senses into megakernels."""
+        """Fold combines over single-use, same-plan senses into megakernels.
+
+        Fused operands may live on *different* dies — the kernel call is one
+        unit, but its pages sense in parallel across their dies (the spec
+        records the spanned die set for scheduling/accounting).
+        """
         use: Dict[int, int] = {root: 1}
         for st in self.steps:
             for a in st.args:
@@ -251,13 +308,17 @@ class _Lowering:
             if any(it is None or not it.is_mcflash or use[it.pid] != 1
                    for it in its):
                 continue
-            key = its[0].plan_key
+            # same plan required (dies may differ: cross-die fusion is fine)
+            key = its[0].plan_key[:4]
             n_pages = len(its[0].wls)
-            if any(it.plan_key != key or len(it.wls) != n_pages for it in its):
+            if any(it.plan_key[:4] != key or len(it.wls) != n_pages
+                   for it in its):
                 continue
+            dies = tuple(sorted({d for it in its for d in it.dies}))
             st.fused = FusedSpec(plan=its[0].plan, op_label=its[0].op_label,
                                  wls=[wl for it in its for wl in it.wls],
-                                 n_operands=len(its), n_pages=n_pages)
+                                 n_operands=len(its), n_pages=n_pages,
+                                 dies=dies)
             consumed.update(it.pid for it in its)
         if consumed:
             self.items = [it for it in self.items if it.pid not in consumed]
@@ -268,18 +329,81 @@ class _Lowering:
             g = groups.get(it.plan_key)
             if g is None:
                 g = groups[it.plan_key] = SenseGroup(
-                    it.plan, it.op_label, it.is_mcflash, it.which, [])
+                    it.plan, it.op_label, it.is_mcflash, it.which, it.dies, [])
             g.items.append(it)
         return list(groups.values())
 
+    def _schedule(self, groups: List[SenseGroup]) -> Tuple[List[Wave], int]:
+        """Greedy topological wave packing: a unit (per-die sense group or
+        fused megakernel) lands in the earliest wave where every die it
+        touches is free; combines attach to the wave their last input
+        becomes ready in, so they overlap with later waves' senses."""
+        waves: List[Wave] = []
+        wave_dies: List[set] = []             # dies busy per wave
+        die_free: Dict[int, int] = {}         # die -> first free wave index
+        avail: Dict[int, int] = {}            # pid -> wave it is ready after
+
+        def place(dies: Tuple[int, ...]) -> int:
+            w = max((die_free.get(d, 0) for d in dies), default=0)
+            while len(waves) <= w:
+                waves.append(Wave())
+                wave_dies.append(set())
+            for d in dies:
+                die_free[d] = w + 1
+            wave_dies[w].update(dies)
+            return w
+
+        for gi, g in enumerate(groups):
+            w = place(g.dies)
+            waves[w].groups.append(gi)
+            for it in g.items:
+                avail[it.pid] = w
+        for si, st in enumerate(self.steps):
+            if st.fused is not None:
+                w = place(st.fused.dies)
+                waves[w].fused.append(si)
+                avail[st.out] = w
+            else:
+                w = max((avail[a] for a in st.args), default=0)
+                while len(waves) <= w:       # pure-combine plans (no senses)
+                    waves.append(Wave())
+                    wave_dies.append(set())
+                waves[w].combines.append(si)
+                avail[st.out] = w
+        return waves, max((len(d) for d in wave_dies), default=0)
+
+
+class _TraceCounter:
+    """Tiny mutable cell the jitted closures capture INSTEAD of the executor:
+    the executable cache outlives sessions (it is device-shared), so cached
+    closures must not pin a dead session's executor/session graph."""
+
+    __slots__ = ("n",)
+
+    def __init__(self) -> None:
+        self.n = 0
+
 
 class Executor:
-    """Session-bound compiled executor with a per-backend executable cache."""
+    """Session-bound compiled executor over the device-shared executable
+    cache, with a VMEM budget for fused megakernel passes."""
 
-    def __init__(self, session):
+    def __init__(self, session, vmem_budget_bytes: Optional[int] = None):
         self.session = session
-        self.cache = ExecutableCache()
-        self.traces = 0               # jit trace events across all executables
+        self.cache = session.device.executables
+        if vmem_budget_bytes is None:
+            vmem_budget_bytes = DEFAULT_VMEM_BUDGET_BYTES
+        assert vmem_budget_bytes > 0, vmem_budget_bytes
+        self.vmem_budget_bytes = int(vmem_budget_bytes)
+        #: most operands one fused pass may stream (VMEM-budget tiling)
+        self.max_fused_operands = max(
+            1, self.vmem_budget_bytes // OPERAND_TILE_BYTES)
+        self._traces = _TraceCounter()
+
+    @property
+    def traces(self) -> int:
+        """jit trace events across all executables this executor built."""
+        return self._traces.n
 
     # -- public entry points ---------------------------------------------------
     def run(self, node: Node, n_bits: int) -> jnp.ndarray:
@@ -294,17 +418,26 @@ class Executor:
     def stats(self) -> dict:
         return {**self.cache.stats(), "traces": self.traces}
 
+    def _fused_chunks(self, n_operands: int) -> int:
+        """Tiled passes a fused spec needs under the VMEM budget."""
+        return -(-n_operands // self.max_fused_operands)
+
     # -- internals ---------------------------------------------------------------
     def _execute(self, node: Node, n_bits: int, popcount: bool):
         sess = self.session
         plan = _Lowering(sess).lower(node)
         self._account(plan)
-        key = (plan.signature(sess.backend.name), popcount)
+        # the cache is per-device (one chip), and signature() leads with the
+        # backend name — only interpret mode and the tiling width need adding
+        key = (getattr(sess.backend, "interpret", None),
+               self.max_fused_operands,
+               plan.signature(sess.backend.name), popcount)
         fn = self.cache.get(key, lambda: self._build(plan, popcount))
         dev = sess.device
-        # The arena row-gathers run OUTSIDE the cached executable (one take
-        # per group), so executable input shapes depend only on the plan
-        # signature — arena growth must not retrace cached executables.
+        # The arena shard-gathers run OUTSIDE the cached executable (one
+        # gather per die shard touched), so executable input shapes depend
+        # only on the plan signature — shard growth must not retrace cached
+        # executables.
         group_vth = tuple(dev.vth_stack(g.wls) for g in plan.groups)
         fused_vth = tuple(dev.vth_stack(st.fused.wls) for st in plan.steps
                           if st.fused is not None)
@@ -312,25 +445,49 @@ class Executor:
         return fn(group_vth, fused_vth, mask)
 
     def _account(self, plan: ExecPlan) -> None:
-        """Batched ledger + counter updates (one call per sense group)."""
+        """Wave-batched ledger + counter updates: ONE parallel die step and
+        one channel step per schedule wave (concurrent per-die groups in a
+        wave overlap in the ledger's die-parallel makespan)."""
         sess = self.session
         dev = sess.device
-        for g in plan.groups:
-            if g.is_mcflash:
-                dev.account_mcflash_batch(g.wls, g.op_label)
-            else:
-                dev.account_page_read_batch(g.wls, g.which)
-            dev.dma_to_controller_batch(g.wls)
-        n_fused = 0
-        for st in plan.steps:
-            if st.fused is not None:
-                dev.account_mcflash_batch(st.fused.wls, st.fused.op_label)
-                dev.dma_to_controller_batch(st.fused.wls)
+        n_fused = n_chunks = 0
+        for wave in plan.waves:
+            per_die: Dict[int, float] = {}
+            per_ch: Dict[int, float] = {}
+            uj = 0.0
+            cmds = 0
+            units: List[Tuple[Dict[int, float], float, List]] = []
+            for gi in wave.groups:
+                g = plan.groups[gi]
+                cost = (dev.mcflash_cost(g.wls, g.op_label) if g.is_mcflash
+                        else dev.page_read_cost(g.wls, g.which))
+                units.append((*cost, g.wls))
+            for si in wave.fused:
+                f = plan.steps[si].fused
+                units.append((*dev.mcflash_cost(f.wls, f.op_label), f.wls))
                 n_fused += 1
+                n_chunks += self._fused_chunks(f.n_operands)
+            for unit_die, unit_uj, wls in units:
+                for die, us in unit_die.items():
+                    per_die[die] = per_die.get(die, 0.0) + us
+                for ch, us in dev.dma_cost(wls).items():
+                    per_ch[ch] = per_ch.get(ch, 0.0) + us
+                uj += unit_uj
+                cmds += len(wls)
+            if per_die:
+                dev.ledger.add_die_batch(per_die, uj, commands=cmds)
+            if per_ch:
+                dev.ledger.add_channel_batch(per_ch)
         sess.in_flash_senses += plan.senses
         sess.sense_items += plan.items
         sess.sense_batches += len(plan.groups) + n_fused
-        sess.megakernel_calls += n_fused
+        sess.sense_waves += len(plan.waves)
+        sess.max_concurrent_dies = max(sess.max_concurrent_dies,
+                                       plan.concurrent_dies)
+        sess.megakernel_calls += n_chunks
+        sess.tiled_megakernel_splits += sum(
+            1 for st in plan.steps if st.fused is not None
+            and st.fused.n_operands > self.max_fused_operands)
         sess.fused_reduce_calls += sum(
             1 for st in plan.steps if len(st.args) > 1 or st.invert
             or st.fused is not None)
@@ -338,42 +495,71 @@ class Executor:
     def _build(self, plan: ExecPlan, popcount: bool):
         """Close a jitted executable over the static plan.  Runtime inputs:
         the gathered per-group / per-fused-step Vth stacks and the packed
-        padding mask — shapes fixed by the plan signature."""
+        padding mask — shapes fixed by the plan signature.
+
+        The closure captures only the (stateless) backend, the static plan,
+        and a trace-counter cell — never the executor/session, which would
+        pin dead sessions in the device-lifetime shared cache."""
         backend = self.session.backend
-        executor = self
+        traces = self._traces
+        max_ops = self.max_fused_operands
         # popcount folds into the root megakernel only when the root IS the
-        # last step and that step fused (steps are emitted in post-order)
+        # last step and that step fused (a fused root consumes raw wordlines,
+        # so nothing else in the plan feeds it)
         fuse_pc = (popcount and bool(plan.steps)
                    and plan.steps[-1].out == plan.root
                    and plan.steps[-1].fused is not None)
+        fused_pos = {si: k for k, si in enumerate(
+            si for si, st in enumerate(plan.steps) if st.fused is not None)}
+
+        def fused_reduce(st: CombineStep, vth: jnp.ndarray) -> jnp.ndarray:
+            """Fused sense->reduce, split into VMEM-budgeted tiled passes
+            when the operand stack exceeds the budget."""
+            f = st.fused
+            if f.n_operands <= max_ops:
+                return backend.sense_reduce(vth, f.plan, op=st.op,
+                                            invert=st.invert)
+            parts = [backend.sense_reduce(vth[s:s + max_ops], f.plan,
+                                          op=st.op, invert=False)
+                     for s in range(0, f.n_operands, max_ops)]
+            return backend.reduce(jnp.stack(parts), st.op, invert=st.invert)
 
         def run(group_vth, fused_vth, mask):
-            executor.traces += 1      # Python side effect: fires at trace time
+            traces.n += 1             # Python side effect: fires at trace time
             partials: Dict[int, jnp.ndarray] = {}
-            for g, vth in zip(plan.groups, group_vth):
-                packed = backend.sense(vth, g.plan)
-                for pid, (s, e) in g.spans():
-                    partials[pid] = packed[s:e].reshape(-1)
-            fi = 0
-            for st in plan.steps:
-                if st.fused is not None:
+            for wave in plan.waves:
+                for gi in wave.groups:
+                    g = plan.groups[gi]
+                    packed = backend.sense(group_vth[gi], g.plan)
+                    for pid, (s, e) in g.spans():
+                        partials[pid] = packed[s:e].reshape(-1)
+                for si in wave.fused:
+                    st = plan.steps[si]
                     f = st.fused
-                    vth = fused_vth[fi].reshape(f.n_operands, f.n_pages, -1)
-                    fi += 1
+                    vth = fused_vth[fused_pos[si]].reshape(
+                        f.n_operands, f.n_pages, -1)
                     if fuse_pc and st.out == plan.root:
-                        counts = backend.sense_reduce_popcount(
-                            vth, f.plan, mask.reshape(f.n_pages, -1),
-                            op=st.op, invert=st.invert)
+                        mask2 = mask.reshape(f.n_pages, -1)
+                        if f.n_operands <= max_ops:
+                            counts = backend.sense_reduce_popcount(
+                                vth, f.plan, mask2, op=st.op,
+                                invert=st.invert)
+                        else:
+                            words = fused_reduce(st, vth).reshape(
+                                f.n_pages, -1) & mask2
+                            counts = backend.popcount(words)
                         return jnp.sum(counts, dtype=jnp.int32)
-                    partials[st.out] = backend.sense_reduce(
-                        vth, f.plan, op=st.op, invert=st.invert).reshape(-1)
-                elif len(st.args) == 1 and not st.invert:
-                    partials[st.out] = partials[st.args[0]]
-                else:
-                    stack = jnp.stack([partials[a] for a in st.args])
-                    out = backend.reduce(stack.reshape(len(st.args), 1, -1),
-                                         st.op, invert=st.invert)
-                    partials[st.out] = out.reshape(-1)
+                    partials[st.out] = fused_reduce(st, vth).reshape(-1)
+                for ci in wave.combines:
+                    st = plan.steps[ci]
+                    if len(st.args) == 1 and not st.invert:
+                        partials[st.out] = partials[st.args[0]]
+                    else:
+                        stack = jnp.stack([partials[a] for a in st.args])
+                        out = backend.reduce(
+                            stack.reshape(len(st.args), 1, -1),
+                            st.op, invert=st.invert)
+                        partials[st.out] = out.reshape(-1)
             out = partials[plan.root] & mask
             if popcount:
                 return backend.popcount(out.reshape(1, -1))[0]

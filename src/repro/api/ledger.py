@@ -3,10 +3,26 @@
 This is the one accounting object threaded through every execution path —
 the functional device, the FTL placement layer, and :class:`ComputeSession`
 — replacing the ad-hoc per-module accounting that used to live in
-``repro.flash.device``.  Busy time is tracked per resource *kind* (dies,
-channels, host link) so the makespan lower bound falls out of a max, and a
-per-category breakdown (sense / program / erase / transfer) supports the
-session's ``stats()`` reporting.
+``repro.flash.device``.
+
+Busy time is tracked two ways:
+
+- **per-resource totals** (``die_busy_us`` / ``channel_busy_us``) — the
+  serial accounting the per-page loops used to produce; ``serial_us()`` is
+  their sum (everything on one die, nothing overlapped);
+- **per schedule step** — each ``add_die_batch`` / ``add_channel_batch``
+  call is one *parallel dispatch step*: all dies (channels) named in the
+  call run concurrently, so the step contributes ``max`` over its per-die
+  busy times.  ``die_step_us`` sums the step maxima — the die-parallel die
+  time the executor's topology-aware schedule actually achieves, always
+  between the busiest single die and ``serial_us()``.  ``makespan_us()``
+  takes the pipelined max over die steps, channel steps, and the host link,
+  so it can legitimately exceed ``serial_us()`` (a die-only sum) on
+  transfer-dominated workloads.
+
+A per-category breakdown (sense / program / erase / transfer) supports the
+session's ``stats()`` reporting, and ``max_parallel_dies`` records the
+widest concurrent dispatch observed.
 """
 from __future__ import annotations
 
@@ -24,6 +40,12 @@ class Ledger:
     commands: int = 0
     # Busy-time breakdown by command category ('sense', 'program', 'erase', ...).
     category_us: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # Schedule-step (die-parallel) accounting: every add_*_batch call is one
+    # parallel dispatch step contributing max(per-resource us) to the makespan.
+    die_step_us: float = 0.0
+    channel_step_us: float = 0.0
+    die_steps: int = 0
+    max_parallel_dies: int = 0
 
     def add_die(self, die: int, us: float, uj: float = 0.0,
                 category: str = "sense") -> None:
@@ -31,8 +53,9 @@ class Ledger:
 
     def add_die_batch(self, per_die_us: Mapping[int, float], uj: float = 0.0,
                       commands: int = 1, category: str = "sense") -> None:
-        """Account a whole command batch in one call (no O(pages) loop):
-        ``per_die_us`` is pre-aggregated busy time per die."""
+        """Account one parallel dispatch step in one call (no O(pages) loop):
+        ``per_die_us`` is pre-aggregated busy time per die; the named dies
+        run concurrently, so the step takes ``max`` of their busy times."""
         total = 0.0
         for die, us in per_die_us.items():
             self.die_busy_us[die] = self.die_busy_us.get(die, 0.0) + us
@@ -40,33 +63,49 @@ class Ledger:
         self.category_us[category] = self.category_us.get(category, 0.0) + total
         self.energy_uj += uj
         self.commands += commands
+        if per_die_us:
+            self.die_step_us += max(per_die_us.values())
+            self.die_steps += 1
+            self.max_parallel_dies = max(self.max_parallel_dies, len(per_die_us))
 
     def add_channel(self, ch: int, us: float) -> None:
         self.add_channel_batch({ch: us})
 
     def add_channel_batch(self, per_channel_us: Mapping[int, float]) -> None:
-        """Batched NAND->controller transfer accounting, one call per group."""
+        """Batched NAND->controller transfer accounting, one parallel step per
+        call (channels named together stream concurrently)."""
         total = 0.0
         for ch, us in per_channel_us.items():
             self.channel_busy_us[ch] = self.channel_busy_us.get(ch, 0.0) + us
             total += us
         self.category_us["dma"] = self.category_us.get("dma", 0.0) + total
+        if per_channel_us:
+            self.channel_step_us += max(per_channel_us.values())
 
     def add_host(self, us: float) -> None:
         self.host_busy_us += us
         self.category_us["host"] = self.category_us.get("host", 0.0) + us
 
-    @property
+    def serial_us(self) -> float:
+        """Fully-serialized die time: the sum of every die's busy time (what
+        a single-die device would take).  ``die_step_us <= serial_us()``
+        always; ``makespan_us()`` may exceed it when channel/host transfer
+        time dominates die time."""
+        return sum(self.die_busy_us.values())
+
     def makespan_us(self) -> float:
-        """Lower-bound makespan: resources of one kind run in parallel."""
-        die = max(self.die_busy_us.values(), default=0.0)
-        ch = max(self.channel_busy_us.values(), default=0.0)
-        return max(die, ch, self.host_busy_us)
+        """Die-parallel makespan: per schedule step, concurrent dies overlap
+        (max per step); steps serialize (sum over steps).  Die work, channel
+        streaming, and the host link pipeline against each other (outer max)."""
+        return max(self.die_step_us, self.channel_step_us, self.host_busy_us)
 
     def summary(self) -> dict:
         return {
-            "makespan_us": self.makespan_us,
+            "makespan_us": self.makespan_us(),
+            "die_parallel_us": self.die_step_us,
+            "serial_us": self.serial_us(),
             "energy_uj": self.energy_uj,
             "commands": self.commands,
+            "max_parallel_dies": self.max_parallel_dies,
             "category_us": dict(self.category_us),
         }

@@ -16,7 +16,8 @@ The counters make both caches observable (and testable).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Hashable, Tuple
+from collections import OrderedDict
+from typing import Callable, Dict, Hashable, Optional, Tuple
 
 from repro.core.mcflash import ReadPlan, plan_op
 from repro.core.vth_model import ChipModel
@@ -62,34 +63,55 @@ class PlanCache:
 
 
 class ExecutableCache:
-    """Caches built executables (or any expensive artefact) per signature.
+    """LRU cache of built executables (or any expensive artefact) per key.
 
     ``get(key, build)`` returns the cached artefact for ``key`` or calls
     ``build()`` once and stores the result; hit/miss counters make repeated
     materializations of the same DAG shape observable as cache hits.
+
+    Like the device-level :class:`PlanCache`, one instance lives on the
+    :class:`~repro.flash.device.FlashDevice` (``device.executables``) so
+    every session on that device shares it — keys embed the chip and backend
+    so sessions with different backends never collide.  ``capacity`` bounds
+    the entry count (least-recently-used executables evict first;
+    ``capacity=None`` disables eviction).
     """
 
-    def __init__(self) -> None:
-        self._entries: Dict[Hashable, object] = {}
+    DEFAULT_CAPACITY = 128
+
+    def __init__(self, capacity: Optional[int] = DEFAULT_CAPACITY) -> None:
+        assert capacity is None or capacity >= 1, capacity
+        self.capacity = capacity
+        self._entries: "OrderedDict[Hashable, object]" = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def get(self, key: Hashable, build: Callable[[], object]) -> object:
         entry = self._entries.get(key)
         if entry is None:
             entry = self._entries[key] = build()
             self.misses += 1
+            if self.capacity is not None:
+                while len(self._entries) > self.capacity:
+                    self._entries.popitem(last=False)
+                    self.evictions += 1
         else:
+            self._entries.move_to_end(key)
             self.hits += 1
         return entry
 
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._entries
+
     def clear(self) -> None:
         self._entries.clear()
-        self.hits = self.misses = 0
+        self.hits = self.misses = self.evictions = 0
 
     def __len__(self) -> int:
         return len(self._entries)
 
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
-                "entries": len(self._entries)}
+                "entries": len(self._entries), "evictions": self.evictions,
+                "capacity": self.capacity}

@@ -41,7 +41,7 @@ class ComputeSession:
 
     def __init__(self, device=None, *, backend: "str | Backend" = "pallas",
                  ftl=None, chip=None, config=None, timing=None, energy=None,
-                 seed: int = 0):
+                 seed: int = 0, vmem_budget_bytes: "int | None" = None):
         # Deferred imports keep repro.api import-light and cycle-free.
         from repro.flash.device import FlashDevice
         from repro.flash.ftl import FTL
@@ -77,25 +77,32 @@ class ComputeSession:
         self.device.set_default_backend(self.backend)
         self.plans: PlanCache = self.device.plans     # shared per-chip plan cache
         self.ledger = self.device.ledger
-        self.executor = Executor(self)
+        self.executor = Executor(self, vmem_budget_bytes=vmem_budget_bytes)
         self.fused_reduce_calls = 0    # combine steps (incl. fused megakernels)
         self.in_flash_senses = 0       # logical senses (one per pair / NOT)
         self.sense_items = 0           # senses + leaf reads (grouped per plan)
-        self.sense_batches = 0         # batched sense kernel dispatches
-        self.megakernel_calls = 0      # fused sense->reduce(->popcount) calls
+        self.sense_batches = 0         # batched per-die sense kernel dispatches
+        self.sense_waves = 0           # topology-schedule waves dispatched
+        self.max_concurrent_dies = 0   # widest per-wave die concurrency seen
+        self.megakernel_calls = 0      # fused sense->reduce(->popcount) passes
+        self.tiled_megakernel_splits = 0  # fused chains split for VMEM budget
         self._tail_masks: Dict[Tuple[int, int], jnp.ndarray] = {}
 
     # -- registration --------------------------------------------------------
-    def write(self, name: str, bits: jnp.ndarray, role: str = "lsb") -> BitVector:
-        """Store a single named bit-vector (scattered; realigned on demand)."""
-        self.ftl.write_scattered(name, jnp.asarray(bits), role=role)
+    def write(self, name: str, bits: jnp.ndarray, role: str = "lsb",
+              die: "int | None" = None) -> BitVector:
+        """Store a single named bit-vector (scattered; realigned on demand).
+        ``die`` pins the home die; default round-robins across dies."""
+        self.ftl.write_scattered(name, jnp.asarray(bits), role=role, die=die)
         return self.vector(name)
 
     def write_pair(self, name_a: str, bits_a: jnp.ndarray,
-                   name_b: str, bits_b: jnp.ndarray) -> Tuple[BitVector, BitVector]:
-        """Store two operands co-located on shared wordlines (the fast path)."""
+                   name_b: str, bits_b: jnp.ndarray,
+                   die: "int | None" = None) -> Tuple[BitVector, BitVector]:
+        """Store two operands co-located on shared wordlines (the fast path).
+        ``die`` pins the pair's home die; default round-robins across dies."""
         self.ftl.write_pair_aligned(name_a, jnp.asarray(bits_a),
-                                    name_b, jnp.asarray(bits_b))
+                                    name_b, jnp.asarray(bits_b), die=die)
         return self.vector(name_a), self.vector(name_b)
 
     def vector(self, name: str) -> BitVector:
@@ -189,7 +196,11 @@ class ComputeSession:
             "in_flash_senses": self.in_flash_senses,
             "sense_items": self.sense_items,
             "sense_batches": self.sense_batches,
+            "sense_waves": self.sense_waves,
+            "max_concurrent_dies": self.max_concurrent_dies,
             "megakernel_calls": self.megakernel_calls,
+            "tiled_megakernel_splits": self.tiled_megakernel_splits,
+            "arena_shards": self.device.arena.n_shards,
             "ledger": self.ledger.summary(),
         }
 

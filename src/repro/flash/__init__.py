@@ -8,6 +8,7 @@
 - ``timing`` / ``energy``: calibrated latency & energy models (§5.5, Fig 8/9).
 - ``system``: k-operand OSC/ISC/ParaBit/Flash-Cosmos/MCFlash comparison model.
 """
+from repro.flash.arena import ShardedVthArena, VthArena
 from repro.flash.device import FlashDevice, Ledger
 from repro.flash.energy import EnergyModel
 from repro.flash.ftl import FTL
@@ -20,6 +21,7 @@ from repro.flash.timing import (TimingModel, isc_time_us, mcflash_time_us,
 
 __all__ = [
     "FlashDevice", "Ledger", "FTL", "SSDConfig", "PAGE_BITS",
+    "VthArena", "ShardedVthArena",
     "TimingModel", "EnergyModel", "SystemModel", "Workload",
     "osc_time_us", "isc_time_us", "mcflash_time_us",
     "image_segmentation", "image_encryption", "bitmap_index", "speedup_table",

@@ -1,24 +1,33 @@
-"""Device-resident Vth arena: one preallocated (slots, page_bits) buffer.
+"""Device-resident Vth storage: per-die shards of (slots, page_bits) buffers.
 
 The functional device used to hold per-wordline Vth tensors in a Python
 dict, so every batched sense paid a host-side ``jnp.stack`` over N separate
-device arrays.  The arena replaces that with a single device-resident 2-D
-buffer plus a free-slot allocator: programming a wordline scatters one row,
-and a batched sense is a single ``jnp.take`` of row indices — exactly the
-shape the compiled executor feeds to the fused kernels, with no per-page
-host round-trips on the read path.
+device arrays.  :class:`VthArena` replaced that with a single device-resident
+2-D buffer plus a free-slot allocator: programming a wordline scatters one
+row, and a batched sense is a single ``jnp.take`` of row indices.
 
-The buffer grows geometrically (rows double, never shrink) so steady-state
-programs/reads never reallocate; freed slots are recycled LIFO.
+:class:`ShardedVthArena` shards that storage per die — one lazily-created
+:class:`VthArena` per die that holds data, addressed by ``(die, slot)``
+refs — so the compiled executor's per-die sense groups each gather from
+their *own* shard (one gather per shard instead of one global gather), and
+shards can optionally be pinned to distinct JAX devices (``devices=`` /
+``devices="auto"``) so multi-die dispatch maps onto real accelerator
+parallelism.
+
+Each shard grows geometrically (rows double, never shrink) so steady-state
+programs/reads never reallocate; freed slots are recycled LIFO per shard.
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["VthArena"]
+__all__ = ["VthArena", "ShardedVthArena", "SlotRef"]
+
+#: address of one arena row: (die, slot-within-die-shard)
+SlotRef = Tuple[int, int]
 
 
 @jax.jit
@@ -26,16 +35,37 @@ def _scatter_rows(buf: jnp.ndarray, idx: jnp.ndarray, rows: jnp.ndarray) -> jnp.
     return buf.at[idx].set(rows)
 
 
+def _gather_parts(bufs: List[jnp.ndarray], idxs: List[jnp.ndarray]) -> jnp.ndarray:
+    """Gather rows from several shard buffers and concatenate them."""
+    return jnp.concatenate(
+        [jnp.take(b, i, axis=0) for b, i in zip(bufs, idxs)], axis=0)
+
+
+#: jitted cross-shard gather — ONE XLA dispatch instead of one per shard
+#: (retraces only when the (shard count, buffer/index shapes) combination
+#: changes, i.e. on shard growth); requires all shards on one device.
+_multi_gather = jax.jit(_gather_parts)
+
+
 class VthArena:
-    """Preallocated (slots, page_bits) float32 Vth storage with a free list."""
+    """Preallocated (slots, page_bits) float32 Vth storage with a free list.
+
+    ``device`` optionally pins the buffer (and every growth extension) to one
+    JAX device — the single-shard building block of :class:`ShardedVthArena`.
+    """
 
     def __init__(self, page_bits: int, init_slots: int = 16,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, device=None):
         self.page_bits = int(page_bits)
         self.dtype = dtype
-        self._buf = jnp.zeros((max(int(init_slots), 1), self.page_bits), dtype)
+        self.device = device
+        self._buf = self._place(
+            jnp.zeros((max(int(init_slots), 1), self.page_bits), dtype))
         self._free: List[int] = list(range(self._buf.shape[0] - 1, -1, -1))
         self.grows = 0                   # observable reallocation count
+
+    def _place(self, x: jnp.ndarray) -> jnp.ndarray:
+        return jax.device_put(x, self.device) if self.device is not None else x
 
     # -- allocation -----------------------------------------------------------
     @property
@@ -48,7 +78,8 @@ class VthArena:
 
     def _grow(self, min_slots: int) -> None:
         new_cap = max(self.capacity * 2, min_slots)
-        extra = jnp.zeros((new_cap - self.capacity, self.page_bits), self.dtype)
+        extra = self._place(
+            jnp.zeros((new_cap - self.capacity, self.page_bits), self.dtype))
         old_cap = self.capacity
         self._buf = jnp.concatenate([self._buf, extra], axis=0)
         self._free.extend(range(new_cap - 1, old_cap - 1, -1))
@@ -72,7 +103,8 @@ class VthArena:
     def write(self, slots: Sequence[int], rows: jnp.ndarray) -> None:
         """Scatter row data into slots: (len(slots), page_bits) in ONE update."""
         rows = jnp.asarray(rows, self.dtype).reshape(len(slots), self.page_bits)
-        self._buf = _scatter_rows(self._buf, jnp.asarray(slots, jnp.int32), rows)
+        self._buf = _scatter_rows(self._buf, jnp.asarray(slots, jnp.int32),
+                                  self._place(rows))
 
     def rows(self, slots: Sequence[int]) -> jnp.ndarray:
         """Row-index vector for a slot list (executable input)."""
@@ -81,3 +113,146 @@ class VthArena:
     def gather(self, slots: Sequence[int]) -> jnp.ndarray:
         """(len(slots), page_bits) view of the requested rows — one take."""
         return jnp.take(self._buf, self.rows(slots), axis=0)
+
+
+class ShardedVthArena:
+    """Per-die Vth shards addressed by ``(die, slot)`` refs.
+
+    Shards are created lazily on first allocation for a die (a 128-die SSD
+    config must not eagerly allocate 128 buffers), each an independent
+    :class:`VthArena` with its own free list, so alloc/free/grow on one die
+    never touches — or retraces against — another die's storage.
+
+    ``devices`` maps shards onto JAX devices round-robin: pass an explicit
+    sequence, or ``"auto"`` for ``jax.devices()``.  On a single-device host
+    this is a no-op; on a TPU slice each die's senses gather locally.
+    """
+
+    def __init__(self, page_bits: int, n_dies: int = 1, init_slots: int = 16,
+                 dtype=jnp.float32, devices=None):
+        assert n_dies >= 1, n_dies
+        self.page_bits = int(page_bits)
+        self.n_dies = int(n_dies)
+        self.init_slots = int(init_slots)
+        self.dtype = dtype
+        if devices == "auto":
+            devices = jax.devices()
+        self.devices = list(devices) if devices else None
+        self._shards: Dict[int, VthArena] = {}
+
+    # -- shards ---------------------------------------------------------------
+    def shard(self, die: int) -> VthArena:
+        """The (lazily-created) per-die shard backing ``die``."""
+        assert 0 <= die < self.n_dies, (die, self.n_dies)
+        arena = self._shards.get(die)
+        if arena is None:
+            dev = (self.devices[die % len(self.devices)]
+                   if self.devices else None)
+            arena = self._shards[die] = VthArena(
+                self.page_bits, self.init_slots, self.dtype, device=dev)
+        return arena
+
+    @property
+    def n_shards(self) -> int:
+        return len(self._shards)
+
+    @property
+    def capacity(self) -> int:
+        return sum(s.capacity for s in self._shards.values())
+
+    @property
+    def used(self) -> int:
+        return sum(s.used for s in self._shards.values())
+
+    @property
+    def grows(self) -> int:
+        return sum(s.grows for s in self._shards.values())
+
+    def shard_stats(self) -> Dict[int, dict]:
+        return {die: {"capacity": s.capacity, "used": s.used, "grows": s.grows}
+                for die, s in sorted(self._shards.items())}
+
+    # -- allocation -----------------------------------------------------------
+    def alloc(self, die: int, n: int = 1) -> List[SlotRef]:
+        """Reserve ``n`` row slots on ``die``'s shard (die-affinity alloc)."""
+        return [(die, s) for s in self.shard(die).alloc(n)]
+
+    def free(self, refs: Sequence[SlotRef]) -> None:
+        for die, slots in self._by_die(refs).items():
+            self.shard(die).free(slots)
+
+    @staticmethod
+    def _by_die(refs: Sequence[SlotRef]) -> Dict[int, List[int]]:
+        out: Dict[int, List[int]] = {}
+        for die, slot in refs:
+            out.setdefault(int(die), []).append(int(slot))
+        return out
+
+    # -- data movement --------------------------------------------------------
+    def write(self, refs: Sequence[SlotRef], rows: jnp.ndarray) -> None:
+        """Scatter row data into refs — one update per touched shard."""
+        refs = list(refs)
+        rows = jnp.asarray(rows, self.dtype).reshape(len(refs), self.page_bits)
+        by_die: Dict[int, List[int]] = {}     # die -> positions in `refs`
+        for i, (die, _) in enumerate(refs):
+            by_die.setdefault(int(die), []).append(i)
+        for die, idxs in by_die.items():
+            self.shard(die).write([refs[i][1] for i in idxs], rows[jnp.asarray(idxs)])
+
+    def _to_compute(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Executable inputs must share one device: with mapped shards, land
+        gathers on the primary mapped device (dispatching each per-die kernel
+        on its own shard's device is a roadmap item)."""
+        return jax.device_put(x, self.devices[0]) if self.devices else x
+
+    def gather(self, refs: Sequence[SlotRef]) -> jnp.ndarray:
+        """(len(refs), page_bits) rows — ONE gather per touched shard.
+
+        Die-local requests (the per-die sense groups) hit the single-shard
+        fast path; cross-die requests (a fused megakernel spanning dies)
+        concatenate the per-shard gathers and restore request order.
+        """
+        refs = list(refs)
+        dies = {int(d) for d, _ in refs}
+        if len(dies) == 1:
+            return self._to_compute(
+                self.shard(dies.pop()).gather([s for _, s in refs]))
+        by_die: Dict[int, List[int]] = {}
+        pos: List[Tuple[int, int]] = []       # (die, index within die gather)
+        for die, slot in refs:
+            lst = by_die.setdefault(int(die), [])
+            pos.append((int(die), len(lst)))
+            lst.append(int(slot))
+        bufs, idxs, offs, off = [], [], {}, 0
+        for die in sorted(by_die):
+            offs[die] = off
+            shard = self.shard(die)
+            bufs.append(shard.buf)
+            idxs.append(shard.rows(by_die[die]))
+            off += len(by_die[die])
+        if self.devices is None:
+            stacked = _multi_gather(bufs, idxs)       # one fused dispatch
+        else:        # shards pinned to distinct devices: gather on each
+            # shard's device, collect the rows onto the compute device
+            stacked = jnp.concatenate(
+                [self._to_compute(jnp.take(b, i, axis=0))
+                 for b, i in zip(bufs, idxs)], axis=0)
+        perm = [offs[d] + i for d, i in pos]
+        if perm == list(range(len(perm))):
+            return stacked                    # die-sorted request (e.g. the
+            # operand-major fused batches round-robined across dies): the
+            # concat already restores request order — skip the take
+        return jnp.take(stacked, jnp.asarray(perm, jnp.int32), axis=0)
+
+    def gather_die(self, die: int, slots: Sequence[int]) -> jnp.ndarray:
+        """Shard-local gather by raw slot ids (per-die sense group path)."""
+        return self.shard(die).gather(slots)
+
+    def die_of(self, ref: SlotRef) -> int:
+        return int(ref[0])
+
+    def shard_devices(self) -> Optional[List]:
+        """The JAX device backing each created shard (None when unmapped)."""
+        if not self.devices:
+            return None
+        return [self.devices[d % len(self.devices)] for d in sorted(self._shards)]

@@ -1,35 +1,42 @@
 """Functional simulated NAND flash device.
 
-Per-wordline Vth lives in a device-resident :class:`~repro.flash.arena.VthArena`
-— one preallocated ``(slots, page_bits)`` buffer — so a batched sense is a
-single row-gather instead of a host-side ``jnp.stack`` over a dict of
-arrays.  Read plans execute through a pluggable backend (Pallas sense
-kernels by default), P/E cycles are tracked per block, and the unified
-:class:`repro.api.Ledger` (time + energy) is threaded through every command
-so that application workloads derive their latency/energy from the *actual
-simulated command stream* rather than hand-waved constants.
+Per-wordline Vth lives in a die-sharded device-resident
+:class:`~repro.flash.arena.ShardedVthArena` — one lazily-created
+``(slots, page_bits)`` shard per die, addressed by ``(die, slot)`` refs —
+so a batched sense is one row-gather *per touched shard* instead of a
+host-side ``jnp.stack`` over a dict of arrays, and per-die sense groups
+from the compiled executor gather only their own die's storage.  Read plans
+execute through a pluggable backend (Pallas sense kernels by default), P/E
+cycles are tracked per block, and the unified :class:`repro.api.Ledger`
+(time + energy) is threaded through every command so that application
+workloads derive their latency/energy from the *actual simulated command
+stream* rather than hand-waved constants.
 
 Read plans compile once per (op, chip) through the device's
-:class:`repro.api.PlanCache`; multi-page ops dispatch through
+:class:`repro.api.PlanCache`, and compiled-DAG executables are shared
+across sessions through the device's :class:`repro.api.ExecutableCache`
+(``device.executables``).  Multi-page ops dispatch through
 :meth:`mcflash_read_batch`, which senses all pages of a batch in one fused
 kernel call, accounts a single SET_FEATURE switch, and books the whole
-batch's die/channel busy time through the batched ledger entry points
-(:meth:`account_mcflash_batch` / :meth:`dma_to_controller_batch`) — no
-O(pages) Python accounting loops on the hot path.
+batch's die/channel busy time through the batched ledger entry points — no
+O(pages) Python accounting loops on the hot path.  The cost of any command
+batch is also exposed *without* booking (:meth:`mcflash_cost` /
+:meth:`page_read_cost` / :meth:`dma_cost`) so the executor can merge a
+whole schedule wave of per-die groups into ONE parallel ledger step.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.api.ledger import Ledger
-from repro.api.plan_cache import PlanCache
+from repro.api.plan_cache import ExecutableCache, PlanCache
 from repro.core import mcflash, vth_model
 from repro.core.mcflash import ReadPlan
 from repro.core.vth_model import ChipModel
-from repro.flash.arena import VthArena
+from repro.flash.arena import ShardedVthArena, SlotRef
 from repro.flash.energy import EnergyModel
 from repro.flash.geometry import SSDConfig
 from repro.flash.timing import TimingModel
@@ -47,18 +54,26 @@ class FlashDevice:
                  config: SSDConfig | None = None,
                  timing: TimingModel | None = None,
                  energy: EnergyModel | None = None,
-                 seed: int = 0):
+                 seed: int = 0, shard_devices=None,
+                 exec_cache_capacity: Optional[int] = ExecutableCache.DEFAULT_CAPACITY):
         self.chip = chip or vth_model.get_chip_model()
         self.config = config or SSDConfig()
         self.timing = timing or TimingModel()
         self.energy = energy or EnergyModel()
         self._page_bits = self.config.page_bits
-        self.arena = VthArena(self._page_bits)
-        self._slot_of: Dict[WordlineKey, int] = {}
+        # One Vth shard per die; `shard_devices` ("auto" or a device list)
+        # optionally pins shards to JAX devices round-robin.
+        self.arena = ShardedVthArena(self._page_bits,
+                                     n_dies=self.config.dies,
+                                     devices=shard_devices)
+        self._slot_of: Dict[WordlineKey, SlotRef] = {}
         self._operands: Dict[WordlineKey, Tuple[jnp.ndarray, jnp.ndarray]] = {}
         self.pe_counts: Dict[Tuple[int, int], int] = {}
         self.ledger = Ledger()
         self.plans = PlanCache()
+        # Compiled-DAG executables: shared by every session on this device
+        # (keys embed backend + plan signature), LRU-bounded.
+        self.executables = ExecutableCache(capacity=exec_cache_capacity)
         from repro.api.backends import PallasBackend   # layers on kernels only
         self._default_backend = PallasBackend()
         self._key = jax.random.PRNGKey(seed)
@@ -71,23 +86,24 @@ class FlashDevice:
         self._default_backend = backend
 
     # -- geometry helpers ---------------------------------------------------
-    def _die_of_plane(self, plane: int) -> int:
+    def die_of_plane(self, plane: int) -> int:
         return plane // self.config.planes_per_die
 
+    # retained alias (older callers)
+    _die_of_plane = die_of_plane
+
     def _channel_of_plane(self, plane: int) -> int:
-        return self._die_of_plane(plane) // self.config.dies_per_channel
+        return self.die_of_plane(plane) // self.config.dies_per_channel
 
     def _next_key(self) -> jax.Array:
         self._key, sub = jax.random.split(self._key)
         return sub
 
     # -- arena access (the compiled executor's input surface) ----------------
-    def vth_rows(self, wls: List[WordlineKey]) -> jnp.ndarray:
-        """Arena row indices for a wordline batch (executable input)."""
-        return self.arena.rows([self._slot_of[wl] for wl in wls])
-
     def vth_stack(self, wls: List[WordlineKey]) -> jnp.ndarray:
-        """(N, page_bits) Vth of a wordline batch — one arena gather."""
+        """(N, page_bits) Vth of a wordline batch — one gather per touched
+        die shard (die-local batches, the per-die sense groups, hit the
+        single-shard fast path)."""
         return self.arena.gather([self._slot_of[wl] for wl in wls])
 
     # -- commands -----------------------------------------------------------
@@ -118,14 +134,15 @@ class FlashDevice:
         for wl in wls:
             slot = self._slot_of.get(wl)
             if slot is None:
-                (slot,) = self.arena.alloc(1)
+                # die-affinity allocation: the row lives on its plane's die shard
+                (slot,) = self.arena.alloc(self.die_of_plane(wl[0]), 1)
                 self._slot_of[wl] = slot
             slots.append(slot)
         self.arena.write(slots, jnp.stack(vths))
         # MLC shared-page program: 2 pages' worth of ISPP per wordline
         per_die: Dict[int, float] = {}
         for wl in wls:
-            die = self._die_of_plane(wl[0])
+            die = self.die_of_plane(wl[0])
             per_die[die] = per_die.get(die, 0.0) + 2 * self.timing.t_prog_us
         self.ledger.add_die_batch(
             per_die,
@@ -138,22 +155,49 @@ class FlashDevice:
         self.program_shared_batch([wl], [lsb_bits], [msb_bits],
                                   retention_hours=retention_hours)
 
+    # -- command cost models (no booking) ------------------------------------
+    def _per_die_us(self, wls: List[WordlineKey], us: float) -> Dict[int, float]:
+        per_die: Dict[int, float] = {}
+        for wl in wls:
+            die = self.die_of_plane(wl[0])
+            per_die[die] = per_die.get(die, 0.0) + us
+        return per_die
+
+    def mcflash_cost(self, wls: List[WordlineKey], op: str,
+                     switch_op: bool = True) -> Tuple[Dict[int, float], float]:
+        """(per-die busy us, energy uj) of a batched MCFlash sense: per-page
+        read latency aggregated per die, ONE SET_FEATURE for the whole batch."""
+        per_die = self._per_die_us(wls, self.timing.op_latency_us(op, switch_op=False))
+        if switch_op and wls:
+            first = self.die_of_plane(wls[0][0])
+            per_die[first] += self.timing.t_setfeature_us
+        uj = self.energy.read_energy_uj_kb(op) * self.config.page_kb * len(wls)
+        return per_die, uj
+
+    def page_read_cost(self, wls: List[WordlineKey],
+                       which: str = "lsb") -> Tuple[Dict[int, float], float]:
+        """(per-die busy us, energy uj) of a batched default-reference read."""
+        op = PAGE_READ_OP[which]
+        per_die = self._per_die_us(wls, self.timing.read_latency_us(op))
+        uj = self.energy.read_energy_uj_kb(op) * self.config.page_kb * len(wls)
+        return per_die, uj
+
+    def dma_cost(self, wls: List[WordlineKey]) -> Dict[int, float]:
+        """Per-channel busy us of NAND -> controller page transfers."""
+        us = self.config.page_bytes / (self.config.channel_bw_gbps * 1e3)
+        per_ch: Dict[int, float] = {}
+        for wl in wls:
+            ch = self._channel_of_plane(wl[0])
+            per_ch[ch] = per_ch.get(ch, 0.0) + us
+        return per_ch
+
     # -- batched ledger accounting ------------------------------------------
     def account_mcflash_batch(self, wls: List[WordlineKey], op: str,
                               switch_op: bool = True) -> None:
-        """Book die busy time + energy for a batched MCFlash sense: per-page
-        read latency aggregated per die, ONE SET_FEATURE for the whole batch."""
+        """Book die busy time + energy for a batched MCFlash sense."""
         if not wls:
             return
-        us = self.timing.op_latency_us(op, switch_op=False)
-        per_die: Dict[int, float] = {}
-        for wl in wls:
-            die = self._die_of_plane(wl[0])
-            per_die[die] = per_die.get(die, 0.0) + us
-        if switch_op:
-            first = self._die_of_plane(wls[0][0])
-            per_die[first] += self.timing.t_setfeature_us
-        uj = self.energy.read_energy_uj_kb(op) * self.config.page_kb * len(wls)
+        per_die, uj = self.mcflash_cost(wls, op, switch_op=switch_op)
         self.ledger.add_die_batch(per_die, uj, commands=len(wls))
 
     def account_page_read_batch(self, wls: List[WordlineKey],
@@ -161,13 +205,7 @@ class FlashDevice:
         """Book die busy time + energy for a batched default-reference read."""
         if not wls:
             return
-        op = PAGE_READ_OP[which]
-        us = self.timing.read_latency_us(op)
-        per_die: Dict[int, float] = {}
-        for wl in wls:
-            die = self._die_of_plane(wl[0])
-            per_die[die] = per_die.get(die, 0.0) + us
-        uj = self.energy.read_energy_uj_kb(op) * self.config.page_kb * len(wls)
+        per_die, uj = self.page_read_cost(wls, which)
         self.ledger.add_die_batch(per_die, uj, commands=len(wls))
 
     def mcflash_read_batch(self, wls: List[WordlineKey], op: str, *,
@@ -240,7 +278,7 @@ class FlashDevice:
         for wl in stale:
             self._operands.pop(wl, None)
         # block erase ~ 3.5 ms, energy ~ 2x page program
-        self.ledger.add_die(self._die_of_plane(plane), 3500.0,
+        self.ledger.add_die(self.die_of_plane(plane), 3500.0,
                             2 * self.energy.e_prog_uj_kb * self.config.page_kb,
                             category="erase")
 
@@ -251,12 +289,9 @@ class FlashDevice:
     def dma_to_controller_batch(self, wls: List[WordlineKey]) -> None:
         """Account NAND -> controller transfers for a whole page batch in one
         ledger call (per-channel busy time aggregated host-side)."""
-        us = self.config.page_bytes / (self.config.channel_bw_gbps * 1e3)
-        per_ch: Dict[int, float] = {}
-        for wl in wls:
-            ch = self._channel_of_plane(wl[0])
-            per_ch[ch] = per_ch.get(ch, 0.0) + us
-        self.ledger.add_channel_batch(per_ch)
+        if not wls:
+            return
+        self.ledger.add_channel_batch(self.dma_cost(wls))
 
     def ext_to_host(self, n_bytes: int) -> None:
         self.ledger.add_host(n_bytes / (self.config.host_bw_gbps * 1e3))

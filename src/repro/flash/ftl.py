@@ -5,9 +5,15 @@ operand placement is a *placement policy*, and the bitwise op is dispatched
 as a read with a per-op SET_FEATURE offset set.  This module provides:
 
 - wear-levelled block allocation (least-P/E free block per plane),
-- striped bit-vector placement across all planes (the §6 layout),
+- **die-affinity placement** (§6 layout): every vector gets a *home die*
+  (round-robin across dies unless pinned with ``die=``) and stripes its
+  pages across that die's planes only — so a vector's LSB/MSB co-pages
+  always share a die (one shard gather per sense group) while *independent*
+  vectors spread across dies, which is what lets the compiled executor
+  dispatch their sense groups concurrently on different dies,
 - aligned operand-pair writes (A -> LSB page, B -> MSB page, same wordline),
-- runtime copyback realignment for scattered operands.
+- runtime copyback realignment for scattered operands (realigned and
+  NOT-ready derived placements inherit the source vector's home die).
 
 Vector-level *compute* lives in :class:`repro.api.ComputeSession`; the
 historical ``mcflash_compute`` / ``mcflash_chain`` entry points remain as
@@ -33,6 +39,8 @@ class VectorMeta:
     #: the co-located page holds zeros (scattered writes) — required for
     #: in-flash NOT; losing a pairing does NOT zero the stale co-page.
     zero_co_page: bool = False
+    #: home die: all pages stripe across this die's planes (die affinity)
+    die: int = 0
 
 
 class FTL:
@@ -45,6 +53,7 @@ class FTL:
         self._wear: Dict[Tuple[int, int], int] = {}
         self.vectors: Dict[str, VectorMeta] = {}
         self._pair_of: Dict[str, str] = {}
+        self._next_die = 0                               # round-robin home die
         self._session = None
 
     @property
@@ -66,6 +75,25 @@ class FTL:
         return key
 
     # -- placement -----------------------------------------------------------
+    def _home_die(self, die: "int | None" = None) -> int:
+        """Pick (or validate) a vector's home die — round-robin by default so
+        independent vectors spread across dies for die-parallel dispatch."""
+        if die is None:
+            die = self._next_die % self.cfg.dies
+            self._next_die += 1
+        assert 0 <= die < self.cfg.dies, (die, self.cfg.dies)
+        return die
+
+    def _placement(self, n_pages: int, die: int) -> List[WordlineKey]:
+        """Allocate ``n_pages`` wordlines striped across ``die``'s planes."""
+        ppd = self.cfg.planes_per_die
+        return [self.allocate_wordline(die * ppd + (i % ppd))
+                for i in range(n_pages)]
+
+    def die_of(self, name: str) -> int:
+        """Home die of a registered vector."""
+        return self.vectors[name].die
+
     @staticmethod
     def derived_not_name(name: str) -> str:
         """Name of the NOT-ready derived placement the session may cache."""
@@ -88,40 +116,45 @@ class FTL:
         return [bits[i * pb:(i + 1) * pb] for i in range(bits.shape[0] // pb)]
 
     def write_pair_aligned(self, name_a: str, bits_a: jnp.ndarray,
-                           name_b: str, bits_b: jnp.ndarray) -> None:
-        """Write operands A,B co-located on shared wordlines, striped across planes."""
+                           name_b: str, bits_b: jnp.ndarray,
+                           die: "int | None" = None) -> None:
+        """Write operands A,B co-located on shared wordlines, striped across
+        one home die's planes (``die=None`` round-robins across dies)."""
         pages_a = self._paginate(bits_a)
         pages_b = self._paginate(bits_b)
         assert len(pages_a) == len(pages_b), "aligned operands must match in size"
         self._invalidate(name_a)
         self._invalidate(name_b)
-        placement: List[WordlineKey] = [
-            self.allocate_wordline(i % self.cfg.planes)
-            for i in range(len(pages_a))]
+        die = self._home_die(die)
+        placement = self._placement(len(pages_a), die)
         self.device.program_shared_batch(placement, pages_a, pages_b)
-        self.vectors[name_a] = VectorMeta(name_a, int(bits_a.shape[0]), placement, "lsb")
-        self.vectors[name_b] = VectorMeta(name_b, int(bits_b.shape[0]), placement, "msb")
+        self.vectors[name_a] = VectorMeta(name_a, int(bits_a.shape[0]),
+                                          placement, "lsb", die=die)
+        self.vectors[name_b] = VectorMeta(name_b, int(bits_b.shape[0]),
+                                          placement, "msb", die=die)
         self._pair_of[name_a] = name_b
         self._pair_of[name_b] = name_a
 
-    def write_scattered(self, name: str, bits: jnp.ndarray, role: str = "lsb") -> None:
+    def write_scattered(self, name: str, bits: jnp.ndarray, role: str = "lsb",
+                        die: "int | None" = None) -> None:
         """Write a single vector without a co-located partner (needs
         realignment before MCFlash compute) — stored with all-zero co-page."""
         self._invalidate(name)
         pages = self._paginate(bits)
-        placement = [self.allocate_wordline(i % self.cfg.planes)
-                     for i in range(len(pages))]
+        die = self._home_die(die)
+        placement = self._placement(len(pages), die)
         zeros = [jnp.zeros_like(p) for p in pages]
         if role == "lsb":
             self.device.program_shared_batch(placement, pages, zeros)
         else:
             self.device.program_shared_batch(placement, zeros, pages)
         self.vectors[name] = VectorMeta(name, int(bits.shape[0]), placement,
-                                        role, zero_co_page=True)
+                                        role, zero_co_page=True, die=die)
 
     def align(self, name_a: str, name_b: str) -> str:
         """Copyback-realign two scattered vectors into an aligned pair; returns
-        the name of the merged pair (A becomes LSB, B becomes MSB)."""
+        the name of the merged pair (A becomes LSB, B becomes MSB).  The
+        merged pair lives on A's home die (die affinity is preserved)."""
         ma, mb = self.vectors[name_a], self.vectors[name_b]
         assert len(ma.pages) == len(mb.pages)
         self._invalidate(name_a)
@@ -131,8 +164,10 @@ class FTL:
             dst = self.allocate_wordline(wa[0])
             self.device.copyback_align(wa, wb, dst, ma.role, mb.role)
             placement.append(dst)
-        self.vectors[name_a] = VectorMeta(name_a, ma.n_bits, placement, "lsb")
-        self.vectors[name_b] = VectorMeta(name_b, mb.n_bits, placement, "msb")
+        self.vectors[name_a] = VectorMeta(name_a, ma.n_bits, placement, "lsb",
+                                          die=ma.die)
+        self.vectors[name_b] = VectorMeta(name_b, mb.n_bits, placement, "msb",
+                                          die=ma.die)
         self._pair_of[name_a] = name_b
         self._pair_of[name_b] = name_a
         return name_a
@@ -187,7 +222,8 @@ class FTL:
                                                  backend=backend)
             self.device.dma_to_controller_batch(meta.pages)
             bits = kops.unpack_bits(packed.reshape(1, -1))[0][: meta.n_bits]
-            self.write_scattered(copy, bits, role="msb")
+            # the derived placement stays on the source vector's home die
+            self.write_scattered(copy, bits, role="msb", die=meta.die)
         return self.vectors[copy]
 
     # -- compute (deprecation shims over the session layer) -------------------

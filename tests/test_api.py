@@ -202,7 +202,7 @@ def test_unified_ledger_exposed_from_old_location():
     led = Ledger()
     led.add_die(0, 10.0, 1.0)
     led.add_die(0, 5.0, category="program")
-    assert led.makespan_us == 15.0
+    assert led.makespan_us() == 15.0
     assert led.summary()["category_us"] == {"sense": 10.0, "program": 5.0}
 
 

@@ -54,9 +54,9 @@ def test_device_ledger_accounts_time_and_energy():
     n = dev.config.page_bits
     wl = (0, 0, 0)
     dev.program_shared(wl, jnp.zeros(n, jnp.uint8), jnp.ones(n, jnp.uint8))
-    t0 = dev.ledger.makespan_us
+    t0 = dev.ledger.makespan_us()
     dev.mcflash_read(wl, "and")
-    assert dev.ledger.makespan_us - t0 == pytest.approx(40.0 + 8.0)  # read+SET_FEATURE
+    assert dev.ledger.makespan_us() - t0 == pytest.approx(40.0 + 8.0)  # read+SET_FEATURE
     assert dev.ledger.energy_uj > 0
 
 
