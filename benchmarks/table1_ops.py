@@ -65,6 +65,29 @@ def main(quick: bool = True) -> None:
          f"max_parallel_dies={led.max_parallel_dies};"
          f"arena_shards={sess.device.arena.n_shards}")
     assert led.die_step_us <= led.serial_us()
+
+    # TLC 3-operand fast paths (§7): a&b&c / a|b|c over one co-located
+    # wordline triple are ONE sense group each (AND3 = 1 phase, OR3 = 2)
+    tsess = ComputeSession(backend="pallas", seed=0, encoding="tlc")
+    csb = (rng.random(n) < 0.5).astype(np.uint8)
+    ta, tb, tc = tsess.write_triple("a", lsb, "b", msb, "c", csb)
+    for op, expr, want in (("and3", ta & tb & tc, lsb & msb & csb),
+                           ("or3", ta | tb | tc, lsb | msb | csb)):
+        got = np.asarray(tsess.materialize(expr, unpacked=True))
+        errors = int(np.sum(got != want))
+        batches0 = tsess.sense_batches
+        iters = 3 if quick else 10
+        us = timeit(lambda: jax.block_until_ready(tsess.materialize(expr)),
+                    iters=iters)
+        per_call = (tsess.sense_batches - batches0) / (iters + 1)  # +warmup
+        plan = tsess.device.plans.get_encoded(
+            op[:-1], ("lsb", "csb", "msb"), tsess.device.tlc_chip, "tlc")
+        emit(f"table1_tlc_{op}", us,
+             f"phases={plan.sensing_phases};errors={errors};"
+             f"sense_groups_per_call={per_call:g};"
+             f"plan={plan.describe().replace(',', ';')}")
+        assert errors == 0, (op, errors)
+        assert per_call == 1, per_call                 # ONE sense group
     emit("table1_total", (time.perf_counter() - t0) * 1e6, f"quick={int(quick)}")
     write_json("BENCH_kernels.json")
 

@@ -24,7 +24,7 @@ from repro.kernels import ref as kernel_ref
 
 
 def _padded_refs(plan: ReadPlan) -> jnp.ndarray:
-    return jnp.asarray(tuple(plan.refs) + (0.0,) * (4 - len(plan.refs)), jnp.float32)
+    return kops.pad_refs(jnp.asarray(plan.refs, jnp.float32))
 
 
 @runtime_checkable
@@ -65,7 +65,8 @@ class SimBackend:
 
     def sense(self, vth: jnp.ndarray, plan: ReadPlan) -> jnp.ndarray:
         return kernel_ref.mlc_sense(vth, _padded_refs(plan), plan.kind,
-                                    invert=plan.uses_inverse)
+                                    invert=plan.uses_inverse,
+                                    n_refs=len(plan.refs))
 
     def reduce(self, stack: jnp.ndarray, op: str, invert: bool = False) -> jnp.ndarray:
         return kernel_ref.bitwise_reduce(stack, op, invert)
@@ -76,14 +77,16 @@ class SimBackend:
     def sense_reduce(self, vth: jnp.ndarray, plan: ReadPlan, *, op: str,
                      invert: bool = False) -> jnp.ndarray:
         return kernel_ref.sense_reduce(vth, _padded_refs(plan), plan.kind,
-                                       plan.uses_inverse, op, invert)
+                                       plan.uses_inverse, op, invert,
+                                       n_refs=len(plan.refs))
 
     def sense_reduce_popcount(self, vth: jnp.ndarray, plan: ReadPlan,
                               mask: jnp.ndarray, *, op: str,
                               invert: bool = False) -> jnp.ndarray:
         return kernel_ref.sense_reduce_popcount(vth, _padded_refs(plan), mask,
                                                 plan.kind, plan.uses_inverse,
-                                                op, invert)
+                                                op, invert,
+                                                n_refs=len(plan.refs))
 
 
 class PallasBackend:

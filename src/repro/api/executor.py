@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.api.graph import ASSOCIATIVE, BASE_OF, Leaf, Node, Op
+from repro.core import tlc as _tlc
 from repro.core.mcflash import ReadPlan
 from repro.kernels.fused import ROW_TILE, TILE_COLS
 
@@ -203,18 +204,43 @@ class _Lowering:
 
     def _read_leaf(self, name: str) -> int:
         meta = self.ftl.vectors[name]
-        plan = self.session.device.page_read_plan(meta.role)
+        plan = self.session.device.page_read_plan(meta.role, meta.encoding)
         from repro.flash.device import PAGE_READ_OP
         return self._item(name, meta.pages, plan, PAGE_READ_OP[meta.role],
                           is_mcflash=False, which=meta.role)
 
-    def _sense_pair(self, op: str, name_a: str, name_b: str) -> int:
-        self.ftl.ensure_aligned(name_a, name_b)
-        pages = self.ftl.vectors[name_a].pages
-        return self._item(name_a, pages, self.session.plan(op), op,
+    def _sense_group(self, op: str, names: Tuple[str, ...]) -> int:
+        """One in-flash sense over 2..3 co-located operands.
+
+        MLC pairs use the Table-1 plans; TLC / reduced-MLC groups compile a
+        multi-reference parity plan over the operands' shared-page roles —
+        a 3-operand TLC AND is ONE single-reference sense."""
+        enc = self.ftl.vectors[names[0]].encoding
+        if enc == _tlc.MLC:
+            assert len(names) == 2, names
+            self.ftl.ensure_aligned(names[0], names[1])
+            pages = self.ftl.vectors[names[0]].pages
+            return self._item(names[0], pages, self.session.plan(op), op,
+                              is_mcflash=True)
+        self.ftl.ensure_colocated(names)
+        metas = [self.ftl.vectors[n] for n in names]
+        plan = self.device.plans.get_encoded(
+            op, tuple(m.role for m in metas), self.device.tlc_chip, enc)
+        return self._item(names[0], metas[0].pages, plan, plan.op,
                           is_mcflash=True)
 
+    def _sense_pair(self, op: str, name_a: str, name_b: str) -> int:
+        return self._sense_group(op, (name_a, name_b))
+
     def _sense_not(self, name: str) -> int:
+        meta = self.ftl.vectors[name]
+        if meta.encoding != _tlc.MLC:
+            # encoded rows run NOT as a direct inverse role read — no
+            # NOT-ready derived placement, zero extra phases
+            plan = self.device.plans.get_encoded(
+                "not", (meta.role,), self.device.tlc_chip, meta.encoding)
+            return self._item(name, meta.pages, plan, plan.op,
+                              is_mcflash=True)
         meta = self.ftl.ensure_not_ready(name, backend=self.session.backend)
         return self._item(meta.name, meta.pages, self.session.plan("not"),
                           "not", is_mcflash=True)
@@ -231,17 +257,36 @@ class _Lowering:
             self.steps.append(CombineStep(pid, (memo[x],), "and", True))
             return pid
         # exactly two stored operands: a single (possibly inverse-read) sense
-        if len(node.args) == 2 and all(isinstance(a, Leaf) for a in node.args):
+        # (mixed-encoding operands cannot share a wordline; they fall through
+        # to per-encoding leaf reads + a controller combine)
+        if len(node.args) == 2 and all(isinstance(a, Leaf) for a in node.args) \
+                and len({self.ftl.vectors[a.name].encoding
+                         for a in node.args}) == 1:
             return self._sense_pair(op, node.args[0].name, node.args[1].name)
         base = BASE_OF.get(op, op)
         invert = op in BASE_OF
         assert base in ASSOCIATIVE or len(node.args) == 2, node
         leaves = [a for a in node.args if isinstance(a, Leaf)]
         others = [a for a in node.args if not isinstance(a, Leaf)]
-        pairs, leftover = self.ftl.pair_for_sense([l.name for l in leaves])
-        args = [self._sense_pair(base, a, b) for a, b in pairs]
-        if leftover is not None:
-            args.append(self._read_leaf(leftover))
+        # bucket by row encoding: groups are pairs on MLC / reduced-MLC
+        # wordlines and up to triples on TLC (a&b&c = ONE sense group)
+        by_enc: Dict[str, List[str]] = {}
+        for leaf in leaves:
+            enc = self.ftl.vectors[leaf.name].encoding
+            by_enc.setdefault(enc, []).append(leaf.name)
+        args = []
+        for names in by_enc.values():
+            groups, leftover = self.ftl.group_for_sense(names)
+            if (invert and not others and len(by_enc) == 1
+                    and len(groups) == 1 and leftover is None
+                    and self.ftl.vectors[groups[0][0]].encoding != _tlc.MLC):
+                # a whole inverted op over ONE encoded group folds into a
+                # single inverse-read sense (e.g. TLC ~(a&b&c): same refs
+                # as AND3, inverse read) — no controller combine
+                return self._sense_group(op, groups[0])
+            args.extend(self._sense_group(base, g) for g in groups)
+            if leftover is not None:
+                args.append(self._read_leaf(leftover))
         args.extend(memo[o] for o in others)
         if len(args) == 1 and not invert:
             return args[0]
@@ -459,12 +504,18 @@ class Executor:
             units: List[Tuple[Dict[int, float], float, List]] = []
             for gi in wave.groups:
                 g = plan.groups[gi]
-                cost = (dev.mcflash_cost(g.wls, g.op_label) if g.is_mcflash
-                        else dev.page_read_cost(g.wls, g.which))
+                # the plan's own phase count drives timing/energy — encoded
+                # (TLC / reduced-MLC) op labels are not in the Table-1 maps
+                cost = (dev.mcflash_cost(g.wls, g.op_label,
+                                         phases=g.plan.sensing_phases)
+                        if g.is_mcflash
+                        else dev.page_read_cost(g.wls, g.which,
+                                                phases=g.plan.sensing_phases))
                 units.append((*cost, g.wls))
             for si in wave.fused:
                 f = plan.steps[si].fused
-                units.append((*dev.mcflash_cost(f.wls, f.op_label), f.wls))
+                units.append((*dev.mcflash_cost(
+                    f.wls, f.op_label, phases=f.plan.sensing_phases), f.wls))
                 n_fused += 1
                 n_chunks += self._fused_chunks(f.n_operands)
             for unit_die, unit_uj, wls in units:

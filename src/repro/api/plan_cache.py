@@ -46,6 +46,29 @@ class PlanCache:
             self.hits += 1
         return plan
 
+    def get_encoded(self, op: str, roles: Tuple[str, ...], chip,
+                    encoding: str) -> ReadPlan:
+        """Cached multi-level-encoding plan: ``op`` over co-located operands
+        stored in ``roles`` under a TLC / reduced-MLC encoding.  Keys embed
+        the encoding, so TLC and reduced-MLC plans on one chip never
+        collide (and never collide with the 3-tuple MLC keys).  Every
+        multi-operand op is commutative, so roles are sorted into canonical
+        order — (a&b&c) and (c&b&a) share one plan, one sense batch, and
+        one cached executable."""
+        from repro.core import tlc  # deferred: core.tlc layers below api
+
+        roles = tuple(sorted(roles))
+        key = (encoding, op, roles, chip)
+        plan = self._plans.get(key)
+        if plan is None:
+            plan = self._plans[key] = tlc.plan_encoded(op, tuple(roles), chip,
+                                                       encoding)
+            self.misses += 1
+            self._miss_counts[key] = self._miss_counts.get(key, 0) + 1
+        else:
+            self.hits += 1
+        return plan
+
     def misses_for(self, op: str, chip: ChipModel, use_inverse_read: bool = True) -> int:
         """How many times this key was actually (re)planned."""
         return self._miss_counts.get((op, chip, bool(use_inverse_read)), 0)

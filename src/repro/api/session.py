@@ -27,7 +27,7 @@ from repro.api.backends import Backend, get_backend
 from repro.api.executor import Executor
 from repro.api.graph import ASSOCIATIVE, BitVector, Leaf, simplify
 from repro.api.plan_cache import PlanCache
-from repro.core import encoding
+from repro.core import encoding, tlc
 from repro.core import mcflash as _mcflash
 from repro.core.mcflash import ReadPlan
 from repro.core.vth_model import ChipModel
@@ -41,10 +41,19 @@ class ComputeSession:
 
     def __init__(self, device=None, *, backend: "str | Backend" = "pallas",
                  ftl=None, chip=None, config=None, timing=None, energy=None,
-                 seed: int = 0, vmem_budget_bytes: "int | None" = None):
+                 seed: int = 0, vmem_budget_bytes: "int | None" = None,
+                 encoding: str = tlc.MLC):
         # Deferred imports keep repro.api import-light and cycle-free.
         from repro.flash.device import FlashDevice
         from repro.flash.ftl import FTL
+
+        if encoding not in tlc.ENCODINGS:
+            raise ValueError(f"unknown encoding {encoding!r}; "
+                             f"pick one of {tlc.ENCODINGS}")
+        #: row encoding this session writes (and senses) vectors under —
+        #: vectors remember their own encoding, so sessions with different
+        #: encodings can share one device
+        self.encoding = encoding
 
         build_kwargs = {"chip": chip, "config": config, "timing": timing,
                         "energy": energy}
@@ -93,7 +102,8 @@ class ComputeSession:
               die: "int | None" = None) -> BitVector:
         """Store a single named bit-vector (scattered; realigned on demand).
         ``die`` pins the home die; default round-robins across dies."""
-        self.ftl.write_scattered(name, jnp.asarray(bits), role=role, die=die)
+        self.ftl.write_scattered(name, jnp.asarray(bits), role=role, die=die,
+                                 encoding=self.encoding)
         return self.vector(name)
 
     def write_pair(self, name_a: str, bits_a: jnp.ndarray,
@@ -102,8 +112,27 @@ class ComputeSession:
         """Store two operands co-located on shared wordlines (the fast path).
         ``die`` pins the pair's home die; default round-robins across dies."""
         self.ftl.write_pair_aligned(name_a, jnp.asarray(bits_a),
-                                    name_b, jnp.asarray(bits_b), die=die)
+                                    name_b, jnp.asarray(bits_b), die=die,
+                                    encoding=self.encoding)
         return self.vector(name_a), self.vector(name_b)
+
+    def write_triple(self, name_a: str, bits_a: jnp.ndarray,
+                     name_b: str, bits_b: jnp.ndarray,
+                     name_c: str, bits_c: jnp.ndarray,
+                     die: "int | None" = None) -> Tuple[BitVector, BitVector,
+                                                        BitVector]:
+        """Store three operands co-located on one TLC wordline's LSB/CSB/MSB
+        shared pages (§7) — the placement that gives 3-operand AND/OR their
+        single-sense-group fast path.  TLC sessions only."""
+        if tlc.PAGES_PER_WL[self.encoding] < 3:
+            raise ValueError(
+                f"write_triple needs a 3-page encoding, not {self.encoding!r}")
+        self.ftl.write_group_aligned(
+            [name_a, name_b, name_c],
+            [jnp.asarray(bits_a), jnp.asarray(bits_b), jnp.asarray(bits_c)],
+            die=die, encoding=self.encoding)
+        return (self.vector(name_a), self.vector(name_b),
+                self.vector(name_c))
 
     def vector(self, name: str) -> BitVector:
         """Handle to an already-registered vector."""
@@ -190,6 +219,8 @@ class ComputeSession:
     def stats(self) -> dict:
         return {
             "backend": self.backend.name,
+            "encoding": self.encoding,
+            "arena_rows_by_encoding": self.device.arena.used_by_encoding(),
             "plan_cache": self.plans.stats(),
             "executor": self.executor.stats(),
             "fused_reduce_calls": self.fused_reduce_calls,

@@ -34,7 +34,7 @@ from repro.core.vth_model import ChipModel
 @dataclasses.dataclass(frozen=True)
 class ReadPlan:
     op: str
-    kind: str                      # 'lsb' | 'msb' | 'sbr'
+    kind: str                      # 'lsb' | 'msb' | 'sbr' | 'parity'
     refs: Tuple[float, ...]        # quantized absolute reference voltages
     sensing_phases: int
     uses_inverse: bool = False     # apply chip inverse-read to the result
@@ -100,6 +100,8 @@ def execute_plan(plan: ReadPlan, vth: jnp.ndarray) -> jnp.ndarray:
         bits = sensing.msb_read(vth, plan.refs[0], plan.refs[1])
     elif plan.kind == "sbr":
         bits = sensing.soft_bit_read(vth, plan.refs[0:2], plan.refs[2:4])
+    elif plan.kind == "parity":
+        bits = sensing.parity_read(vth, plan.refs)
     else:
         raise ValueError(plan.kind)
     if plan.uses_inverse:

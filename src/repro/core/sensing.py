@@ -37,3 +37,19 @@ def soft_bit_read(vth: jnp.ndarray,
 def inverse_read(bits: jnp.ndarray) -> jnp.ndarray:
     """Inverse read: the chip returns complemented page-buffer data [41]."""
     return (1 - bits).astype(jnp.uint8)
+
+
+def parity_read(vth: jnp.ndarray, refs: tuple[float, ...]) -> jnp.ndarray:
+    """Generalized multi-reference read (TLC / 8-state encodings, §7).
+
+    One sensing phase per reference; the page buffer XNOR-accumulates the
+    strobe results (the same latch sequencing SBR uses), so the returned bit
+    is 1 iff an *even* number of references lie below the cell's Vth.  With
+    references placed at the valleys where a target band pattern flips, this
+    reads out any per-state bit pattern in ``len(refs)`` phases.
+    """
+    assert refs, "parity read needs at least one reference"
+    odd = vth > refs[0]
+    for r in refs[1:]:
+        odd = odd ^ (vth > r)
+    return (1 - odd.astype(jnp.uint8)).astype(jnp.uint8)

@@ -21,15 +21,40 @@ differ in one bit):
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import encoding as _mlc_enc
+
+# ----------------------------- encoding registry -----------------------------
+# The structural axis threaded through the arena / device / FTL / executor:
+# how many shared pages one wordline carries and which roles address them.
+MLC, TLC, REDUCED_MLC = "mlc", "tlc", "reduced-mlc"
+ENCODINGS = (MLC, TLC, REDUCED_MLC)
+#: shared pages per wordline (logical operands co-located on one row)
+PAGES_PER_WL = {MLC: 2, TLC: 3, REDUCED_MLC: 2}
+#: role names addressing the shared pages, in canonical order
+ROLES_OF = {MLC: ("lsb", "msb"), TLC: ("lsb", "csb", "msb"),
+            REDUCED_MLC: ("lsb", "msb")}
 
 # (LSB, CSB, MSB) per state — valid Gray code.
 TLC_LSB = jnp.array([1, 1, 1, 1, 0, 0, 0, 0], dtype=jnp.uint8)
 TLC_CSB = jnp.array([1, 1, 0, 0, 0, 0, 1, 1], dtype=jnp.uint8)
 TLC_MSB = jnp.array([1, 0, 0, 1, 1, 0, 0, 1], dtype=jnp.uint8)
+
+#: per-role logical bit per Vth-ordered state (plain ints: plan compilation
+#: is host-side), derived from the canonical Gray tables — TLC from the
+#: arrays above, reduced-MLC (which occupies L0 < L2 < L5 < L7) from the
+#: MLC Gray convention on the occupied states.
+ROLE_BITS: Dict[str, Dict[str, Tuple[int, ...]]] = {
+    TLC: {"lsb": tuple(int(b) for b in TLC_LSB),
+          "csb": tuple(int(b) for b in TLC_CSB),
+          "msb": tuple(int(b) for b in TLC_MSB)},
+    REDUCED_MLC: {"lsb": tuple(int(b) for b in _mlc_enc.LSB_OF_STATE),
+                  "msb": tuple(int(b) for b in _mlc_enc.MSB_OF_STATE)},
+}
 
 # (lsb, csb, msb) -> state, flattened as lsb*4 + csb*2 + msb
 _STATE_OF_BITS = jnp.zeros(8, jnp.uint8)
@@ -125,3 +150,101 @@ def reduced_or_read(vth: jnp.ndarray, chip: TLCChipModel) -> jnp.ndarray:
     lo = 0.5 * (chip.prog_hi[1] + chip.prog_lo[4])    # L2|L5 wide valley
     hi = 0.5 * (chip.prog_hi[4] + chip.prog_lo[6])    # L5|L7 valley
     return ((vth < lo) | (vth > hi)).astype(jnp.uint8)
+
+
+# ----------------------------- read-plan compilation -------------------------
+# The general mechanism behind every §7 fast path: any boolean function of
+# the co-located page bits is a per-state *band pattern* over the Vth-ordered
+# states; placing one read reference at every valley where the pattern flips
+# turns it into a single parity read of len(refs) sensing phases (the page
+# buffer XNOR-accumulates strobes exactly as in SBR).  TLC AND3 degenerates
+# to 1 reference, OR3 to 2, XOR3 to the full 7-reference comb.
+
+#: occupied TLC states in reduced-MLC mode, in Vth order
+REDUCED_STATES = (0, 2, 5, 7)
+
+#: fold rules for the associative bases (host-side ints)
+_FOLD = {"and": lambda bits: int(all(bits)),
+         "or": lambda bits: int(any(bits)),
+         "xor": lambda bits: sum(bits) % 2}
+_BASE_OF = {"nand": "and", "nor": "or", "xnor": "xor"}
+
+
+def valleys(chip: TLCChipModel, encoding: str = TLC) -> Tuple[float, ...]:
+    """Inter-state reference targets, in Vth order.
+
+    Native TLC has 7 valleys (one per adjacent state pair); reduced-MLC has
+    3 *wide* valleys between the occupied states L0 < L2 < L5 < L7 — the
+    doubled margins that recover error-free operation on worn blocks.
+    """
+    if encoding == TLC:
+        return tuple(chip.valley(i) for i in range(7))
+    assert encoding == REDUCED_MLC, encoding
+    out = []
+    for lo, hi in zip(REDUCED_STATES, REDUCED_STATES[1:]):
+        lo_top = chip.erase_hi if lo == 0 else chip.prog_hi[lo - 1]
+        out.append(0.5 * (lo_top + chip.prog_lo[hi - 1]))
+    return tuple(out)
+
+
+def op_pattern(op: str, roles: Tuple[str, ...], encoding: str) -> Tuple[int, ...]:
+    """Per-state result bits of ``op`` over the given page roles.
+
+    ``op`` is 'read' (plain page read of one role), 'not', or any of the
+    2-/3-operand bitwise ops; ``roles`` lists each operand's shared-page
+    role in operand order.
+    """
+    bits = ROLE_BITS[encoding]
+    cols = [bits[r] for r in roles]
+    if op == "read":
+        (col,) = cols
+        return col
+    if op == "not":
+        (col,) = cols
+        return tuple(1 - b for b in col)
+    base = _BASE_OF.get(op, op)
+    fold = _FOLD[base]
+    pattern = tuple(fold([c[s] for c in cols]) for s in range(len(cols[0])))
+    if op in _BASE_OF:
+        pattern = tuple(1 - b for b in pattern)
+    return pattern
+
+
+def pattern_plan(op_label: str, pattern: Tuple[int, ...], chip: TLCChipModel,
+                 encoding: str):
+    """Compile a band pattern into a parity :class:`~repro.core.mcflash.ReadPlan`.
+
+    References land at every valley where the pattern flips; the plan's
+    inverse-read flag absorbs patterns that start at 0.  Sensing phases =
+    reference count (one strobe per reference).
+    """
+    from repro.core.mcflash import ReadPlan   # deferred: mcflash layers above
+
+    vals = valleys(chip, encoding)
+    assert len(pattern) == len(vals) + 1, (pattern, encoding)
+    assert all(b in (0, 1) for b in pattern), pattern
+    refs = tuple(v for v, a, b in zip(vals, pattern, pattern[1:]) if a != b)
+    if not refs:
+        # constant pattern (never emitted by the executor's lowering, but a
+        # hand-built plan shouldn't crash): one reference above the window
+        # puts every cell in band 0.
+        refs = (chip.prog_hi[-1] + 1.0,)
+    return ReadPlan(op_label, "parity", refs, len(refs),
+                    uses_inverse=(pattern[0] == 0))
+
+
+def plan_encoded(op: str, roles: Tuple[str, ...], chip: TLCChipModel,
+                 encoding: str):
+    """Read plan for ``op`` over co-located operands stored in ``roles``."""
+    label = f"{encoding}:{op}:" + "+".join(roles)
+    return pattern_plan(label, op_pattern(op, roles, encoding), chip, encoding)
+
+
+def encode_states(encoding: str, pages: Tuple[jnp.ndarray, ...]) -> jnp.ndarray:
+    """Map the shared pages of one wordline (role order) to Vth state ids."""
+    if encoding == TLC:
+        lsb, csb, msb = pages
+        return encode_tlc(lsb, csb, msb)
+    assert encoding == REDUCED_MLC, encoding
+    lsb, msb = pages
+    return encode_reduced(lsb, msb)

@@ -24,6 +24,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.tlc import ENCODINGS
+
 __all__ = ["VthArena", "ShardedVthArena", "SlotRef"]
 
 #: address of one arena row: (die, slot-within-die-shard)
@@ -63,6 +65,7 @@ class VthArena:
             jnp.zeros((max(int(init_slots), 1), self.page_bits), dtype))
         self._free: List[int] = list(range(self._buf.shape[0] - 1, -1, -1))
         self.grows = 0                   # observable reallocation count
+        self._row_encoding: Dict[int, str] = {}   # slot -> row layout
 
     def _place(self, x: jnp.ndarray) -> jnp.ndarray:
         return jax.device_put(x, self.device) if self.device is not None else x
@@ -85,14 +88,39 @@ class VthArena:
         self._free.extend(range(new_cap - 1, old_cap - 1, -1))
         self.grows += 1
 
-    def alloc(self, n: int = 1) -> List[int]:
-        """Reserve ``n`` row slots (growing the buffer if exhausted)."""
+    def alloc(self, n: int = 1, encoding: str = "mlc") -> List[int]:
+        """Reserve ``n`` row slots (growing the buffer if exhausted), tagged
+        with the row layout's encoding."""
+        assert encoding in ENCODINGS, encoding
         if len(self._free) < n:
             self._grow(self.capacity + n - len(self._free))
-        return [self._free.pop() for _ in range(n)]
+        slots = [self._free.pop() for _ in range(n)]
+        for s in slots:
+            self._row_encoding[s] = encoding
+        return slots
 
     def free(self, slots: Sequence[int]) -> None:
+        for s in slots:
+            self._row_encoding.pop(int(s), None)
         self._free.extend(int(s) for s in slots)
+
+    def encoding_of(self, slot: int) -> str:
+        """Row layout of an allocated slot."""
+        return self._row_encoding[int(slot)]
+
+    def retag(self, slot: int, encoding: str) -> None:
+        """Update an allocated slot's row layout (wordline reprogram under a
+        different encoding reuses its slot)."""
+        assert encoding in ENCODINGS, encoding
+        assert int(slot) in self._row_encoding, slot
+        self._row_encoding[int(slot)] = encoding
+
+    def used_by_encoding(self) -> Dict[str, int]:
+        """Allocated-slot count per row layout."""
+        out: Dict[str, int] = {}
+        for enc in self._row_encoding.values():
+            out[enc] = out.get(enc, 0) + 1
+        return out
 
     # -- data movement --------------------------------------------------------
     @property
@@ -169,13 +197,34 @@ class ShardedVthArena:
         return sum(s.grows for s in self._shards.values())
 
     def shard_stats(self) -> Dict[int, dict]:
-        return {die: {"capacity": s.capacity, "used": s.used, "grows": s.grows}
+        return {die: {"capacity": s.capacity, "used": s.used, "grows": s.grows,
+                      "encodings": s.used_by_encoding()}
                 for die, s in sorted(self._shards.items())}
 
+    def used_by_encoding(self) -> Dict[str, int]:
+        """Allocated-row count per row layout across all shards."""
+        out: Dict[str, int] = {}
+        for s in self._shards.values():
+            for enc, n in s.used_by_encoding().items():
+                out[enc] = out.get(enc, 0) + n
+        return out
+
     # -- allocation -----------------------------------------------------------
-    def alloc(self, die: int, n: int = 1) -> List[SlotRef]:
-        """Reserve ``n`` row slots on ``die``'s shard (die-affinity alloc)."""
-        return [(die, s) for s in self.shard(die).alloc(n)]
+    def alloc(self, die: int, n: int = 1,
+              encoding: str = "mlc") -> List[SlotRef]:
+        """Reserve ``n`` row slots on ``die``'s shard (die-affinity alloc),
+        tagged with the row layout's encoding."""
+        return [(die, s) for s in self.shard(die).alloc(n, encoding)]
+
+    def encoding_of(self, ref: SlotRef) -> str:
+        """Row layout of an allocated ``(die, slot)`` ref."""
+        die, slot = ref
+        return self.shard(int(die)).encoding_of(slot)
+
+    def retag(self, ref: SlotRef, encoding: str) -> None:
+        """Update an allocated ``(die, slot)`` ref's row layout."""
+        die, slot = ref
+        self.shard(int(die)).retag(slot, encoding)
 
     def free(self, refs: Sequence[SlotRef]) -> None:
         for die, slots in self._by_die(refs).items():

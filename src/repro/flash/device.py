@@ -33,8 +33,9 @@ import jax.numpy as jnp
 
 from repro.api.ledger import Ledger
 from repro.api.plan_cache import ExecutableCache, PlanCache
-from repro.core import mcflash, vth_model
+from repro.core import mcflash, tlc, vth_model
 from repro.core.mcflash import ReadPlan
+from repro.core.tlc import PAGES_PER_WL, TLCChipModel
 from repro.core.vth_model import ChipModel
 from repro.flash.arena import ShardedVthArena, SlotRef
 from repro.flash.energy import EnergyModel
@@ -44,7 +45,7 @@ from repro.flash.timing import TimingModel
 WordlineKey = Tuple[int, int, int]  # (plane, block, wordline)
 
 #: ledger/timing op label for a standard page read of each role
-PAGE_READ_OP = {"lsb": "and", "msb": "or"}
+PAGE_READ_OP = {"lsb": "and", "csb": "or", "msb": "or"}
 
 
 class FlashDevice:
@@ -55,8 +56,11 @@ class FlashDevice:
                  timing: TimingModel | None = None,
                  energy: EnergyModel | None = None,
                  seed: int = 0, shard_devices=None,
+                 tlc_chip: TLCChipModel | None = None,
                  exec_cache_capacity: Optional[int] = ExecutableCache.DEFAULT_CAPACITY):
         self.chip = chip or vth_model.get_chip_model()
+        # 8-state chip model backing TLC and reduced-MLC wordlines (§7)
+        self.tlc_chip = tlc_chip or TLCChipModel()
         self.config = config or SSDConfig()
         self.timing = timing or TimingModel()
         self.energy = energy or EnergyModel()
@@ -67,7 +71,9 @@ class FlashDevice:
                                      n_dies=self.config.dies,
                                      devices=shard_devices)
         self._slot_of: Dict[WordlineKey, SlotRef] = {}
-        self._operands: Dict[WordlineKey, Tuple[jnp.ndarray, jnp.ndarray]] = {}
+        # stored page bits per wordline, role order (2 for MLC/reduced, 3 TLC)
+        self._operands: Dict[WordlineKey, Tuple[jnp.ndarray, ...]] = {}
+        self._encoding_of: Dict[WordlineKey, str] = {}
         self.pe_counts: Dict[Tuple[int, int], int] = {}
         self.ledger = Ledger()
         self.plans = PlanCache()
@@ -110,50 +116,83 @@ class FlashDevice:
     def program_shared_batch(self, wls: List[WordlineKey],
                              lsb_pages: List[jnp.ndarray],
                              msb_pages: List[jnp.ndarray],
-                             retention_hours: float = 0.0) -> None:
-        """Program the shared LSB/MSB pages of a wordline batch.
+                             retention_hours: float = 0.0, *,
+                             csb_pages: "List[jnp.ndarray] | None" = None,
+                             encoding: str = tlc.MLC) -> None:
+        """Program the shared pages of a wordline batch under one encoding.
 
-        Vth generation stays per-page (independent RNG streams), but the
-        arena write is ONE scatter and the ledger entry ONE batched call.
+        MLC programs (LSB, MSB) through the 4-state chip model; TLC programs
+        (LSB, CSB, MSB) and reduced-MLC programs (LSB, MSB) on the widely
+        spaced {L0, L2, L5, L7} states, both through the 8-state chip.  Vth
+        generation stays per-page (independent RNG streams), but the arena
+        write is ONE scatter and the ledger entry ONE batched call.
         """
+        assert encoding in tlc.ENCODINGS, encoding
+        if encoding == tlc.TLC:
+            assert csb_pages is not None and len(csb_pages) == len(wls), \
+                "TLC wordlines carry three shared pages (lsb, csb, msb)"
+        else:
+            assert csb_pages is None, f"{encoding} wordlines have no CSB page"
         assert len(wls) == len(lsb_pages) == len(msb_pages)
         if not wls:
             return
         vths = []
-        for wl, lsb_bits, msb_bits in zip(wls, lsb_pages, msb_pages):
+        for i, wl in enumerate(wls):
+            lsb_bits, msb_bits = lsb_pages[i], msb_pages[i]
             assert lsb_bits.shape == (self._page_bits,), lsb_bits.shape
             plane, block, _ = wl
             n_pe = self.pe_counts.get((plane, block), 0)
-            vth, _ = vth_model.program_page(
-                self._next_key(), lsb_bits, msb_bits, self.chip,
-                n_pe=float(n_pe), retention_hours=retention_hours)
+            if encoding == tlc.MLC:
+                vth, _ = vth_model.program_page(
+                    self._next_key(), lsb_bits, msb_bits, self.chip,
+                    n_pe=float(n_pe), retention_hours=retention_hours)
+                pages = (lsb_bits, msb_bits)
+            else:
+                # 8-state programming (retention drift is modeled for the
+                # MLC chip only; the §7 experiments sweep P/E cycling)
+                assert retention_hours == 0.0, \
+                    "retention drift is not modeled for 8-state encodings"
+                pages = ((lsb_bits, csb_pages[i], msb_bits)
+                         if encoding == tlc.TLC else (lsb_bits, msb_bits))
+                states = tlc.encode_states(encoding, pages)
+                vth = tlc.program_tlc(self._next_key(), states, self.tlc_chip,
+                                      n_pe=float(n_pe))
             vths.append(vth)
-            self._operands[wl] = (lsb_bits.astype(jnp.uint8),
-                                  msb_bits.astype(jnp.uint8))
+            self._operands[wl] = tuple(p.astype(jnp.uint8) for p in pages)
+            self._encoding_of[wl] = encoding
         slots = []
         for wl in wls:
             slot = self._slot_of.get(wl)
             if slot is None:
                 # die-affinity allocation: the row lives on its plane's die shard
-                (slot,) = self.arena.alloc(self.die_of_plane(wl[0]), 1)
+                (slot,) = self.arena.alloc(self.die_of_plane(wl[0]), 1,
+                                           encoding=encoding)
                 self._slot_of[wl] = slot
+            elif self.arena.encoding_of(slot) != encoding:
+                # reprogram under a different encoding reuses the slot
+                self.arena.retag(slot, encoding)
             slots.append(slot)
         self.arena.write(slots, jnp.stack(vths))
-        # MLC shared-page program: 2 pages' worth of ISPP per wordline
+        # shared-page program: one page's worth of ISPP per shared page
+        n_pages = PAGES_PER_WL[encoding]
         per_die: Dict[int, float] = {}
         for wl in wls:
             die = self.die_of_plane(wl[0])
-            per_die[die] = per_die.get(die, 0.0) + 2 * self.timing.t_prog_us
+            per_die[die] = per_die.get(die, 0.0) + n_pages * self.timing.t_prog_us
         self.ledger.add_die_batch(
             per_die,
-            2 * self.energy.e_prog_uj_kb * self.config.page_kb * len(wls),
+            n_pages * self.energy.e_prog_uj_kb * self.config.page_kb * len(wls),
             commands=len(wls), category="program")
 
     def program_shared(self, wl: WordlineKey, lsb_bits: jnp.ndarray,
-                       msb_bits: jnp.ndarray, retention_hours: float = 0.0) -> None:
-        """Program the shared LSB/MSB pages of one wordline (16 kB each)."""
-        self.program_shared_batch([wl], [lsb_bits], [msb_bits],
-                                  retention_hours=retention_hours)
+                       msb_bits: jnp.ndarray, retention_hours: float = 0.0,
+                       *, csb_bits: "jnp.ndarray | None" = None,
+                       encoding: str = tlc.MLC) -> None:
+        """Program the shared pages of one wordline (16 kB each)."""
+        self.program_shared_batch(
+            [wl], [lsb_bits], [msb_bits], retention_hours=retention_hours,
+            csb_pages=None if csb_bits is None else [csb_bits],
+            encoding=encoding)
 
     # -- command cost models (no booking) ------------------------------------
     def _per_die_us(self, wls: List[WordlineKey], us: float) -> Dict[int, float]:
@@ -164,22 +203,27 @@ class FlashDevice:
         return per_die
 
     def mcflash_cost(self, wls: List[WordlineKey], op: str,
-                     switch_op: bool = True) -> Tuple[Dict[int, float], float]:
+                     switch_op: bool = True,
+                     phases: Optional[int] = None) -> Tuple[Dict[int, float], float]:
         """(per-die busy us, energy uj) of a batched MCFlash sense: per-page
-        read latency aggregated per die, ONE SET_FEATURE for the whole batch."""
-        per_die = self._per_die_us(wls, self.timing.op_latency_us(op, switch_op=False))
+        read latency aggregated per die, ONE SET_FEATURE for the whole batch.
+        ``phases`` overrides the MLC Table-1 phase count (encoded plans)."""
+        per_die = self._per_die_us(
+            wls, self.timing.op_latency_us(op, switch_op=False, phases=phases))
         if switch_op and wls:
             first = self.die_of_plane(wls[0][0])
             per_die[first] += self.timing.t_setfeature_us
-        uj = self.energy.read_energy_uj_kb(op) * self.config.page_kb * len(wls)
+        uj = (self.energy.read_energy_uj_kb(op, phases)
+              * self.config.page_kb * len(wls))
         return per_die, uj
 
-    def page_read_cost(self, wls: List[WordlineKey],
-                       which: str = "lsb") -> Tuple[Dict[int, float], float]:
+    def page_read_cost(self, wls: List[WordlineKey], which: str = "lsb",
+                       phases: Optional[int] = None) -> Tuple[Dict[int, float], float]:
         """(per-die busy us, energy uj) of a batched default-reference read."""
         op = PAGE_READ_OP[which]
-        per_die = self._per_die_us(wls, self.timing.read_latency_us(op))
-        uj = self.energy.read_energy_uj_kb(op) * self.config.page_kb * len(wls)
+        per_die = self._per_die_us(wls, self.timing.read_latency_us(op, phases))
+        uj = (self.energy.read_energy_uj_kb(op, phases)
+              * self.config.page_kb * len(wls))
         return per_die, uj
 
     def dma_cost(self, wls: List[WordlineKey]) -> Dict[int, float]:
@@ -193,19 +237,22 @@ class FlashDevice:
 
     # -- batched ledger accounting ------------------------------------------
     def account_mcflash_batch(self, wls: List[WordlineKey], op: str,
-                              switch_op: bool = True) -> None:
+                              switch_op: bool = True,
+                              phases: Optional[int] = None) -> None:
         """Book die busy time + energy for a batched MCFlash sense."""
         if not wls:
             return
-        per_die, uj = self.mcflash_cost(wls, op, switch_op=switch_op)
+        per_die, uj = self.mcflash_cost(wls, op, switch_op=switch_op,
+                                        phases=phases)
         self.ledger.add_die_batch(per_die, uj, commands=len(wls))
 
     def account_page_read_batch(self, wls: List[WordlineKey],
-                                which: str = "lsb") -> None:
+                                which: str = "lsb",
+                                phases: Optional[int] = None) -> None:
         """Book die busy time + energy for a batched default-reference read."""
         if not wls:
             return
-        per_die, uj = self.page_read_cost(wls, which)
+        per_die, uj = self.page_read_cost(wls, which, phases)
         self.ledger.add_die_batch(per_die, uj, commands=len(wls))
 
     def mcflash_read_batch(self, wls: List[WordlineKey], op: str, *,
@@ -221,7 +268,8 @@ class FlashDevice:
         assert wls, "empty wordline batch"
         if plan is None:
             plan = self.plans.get(op, self.chip)
-        self.account_mcflash_batch(wls, op, switch_op=switch_op)
+        self.account_mcflash_batch(wls, op, switch_op=switch_op,
+                                   phases=plan.sensing_phases)
         if backend is None:
             backend = self._default_backend
         return backend.sense(self.vth_stack(wls), plan)
@@ -236,27 +284,35 @@ class FlashDevice:
                                               switch_op=switch_op)
         return packed_bits[0] if packed else kops.unpack_bits(packed_bits)[0]
 
-    def page_read_plan(self, which: str = "lsb") -> ReadPlan:
+    def page_read_plan(self, which: str = "lsb",
+                       encoding: str = tlc.MLC) -> ReadPlan:
         """Default-reference read plan for one shared-page role."""
+        if encoding != tlc.MLC:
+            return self.plans.get_encoded("read", (which,), self.tlc_chip,
+                                          encoding)
+        assert which in ("lsb", "msb"), \
+            f"MLC wordlines have no {which!r} page (missing encoding=?)"
         v0, v1, v2 = self.chip.vref_default
         if which == "lsb":
             return ReadPlan("page_lsb", "lsb", (v1,), 1)
         return ReadPlan("page_msb", "msb", (v0, v2), 2)
 
     def page_read_batch(self, wls: List[WordlineKey], which: str = "lsb", *,
-                        backend=None) -> jnp.ndarray:
+                        backend=None, encoding: str = tlc.MLC) -> jnp.ndarray:
         """Standard (default-reference) read of a batch of pages in one
         fused sense call -> (N, words) packed."""
         assert wls, "empty wordline batch"
-        self.account_page_read_batch(wls, which)
-        plan = self.page_read_plan(which)
+        plan = self.page_read_plan(which, encoding)
+        self.account_page_read_batch(wls, which, phases=plan.sensing_phases)
         return (backend or self._default_backend).sense(self.vth_stack(wls), plan)
 
     def page_read(self, wl: WordlineKey, which: str = "lsb",
-                  packed: bool = True, *, backend=None) -> jnp.ndarray:
+                  packed: bool = True, *, backend=None,
+                  encoding: str = tlc.MLC) -> jnp.ndarray:
         """Standard (default-reference) page read."""
         from repro.kernels import ops as kops
-        out = self.page_read_batch([wl], which, backend=backend)
+        out = self.page_read_batch([wl], which, backend=backend,
+                                   encoding=encoding)
         return out[0] if packed else kops.unpack_bits(out)[0]
 
     def copyback_align(self, src_a: WordlineKey, src_b: WordlineKey,
@@ -277,6 +333,7 @@ class FlashDevice:
         self.arena.free([self._slot_of.pop(wl) for wl in stale])
         for wl in stale:
             self._operands.pop(wl, None)
+            self._encoding_of.pop(wl, None)
         # block erase ~ 3.5 ms, energy ~ 2x page program
         self.ledger.add_die(self.die_of_plane(plane), 3500.0,
                             2 * self.energy.e_prog_uj_kb * self.config.page_kb,
@@ -297,9 +354,18 @@ class FlashDevice:
         self.ledger.add_host(n_bytes / (self.config.host_bw_gbps * 1e3))
 
     # -- oracles for verification -------------------------------------------
-    def stored_operands(self, wl: WordlineKey) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    def stored_operands(self, wl: WordlineKey) -> Tuple[jnp.ndarray, ...]:
+        """Stored page bits in role order (2 pages for MLC/reduced, 3 TLC)."""
         return self._operands[wl]
 
+    def encoding_of(self, wl: WordlineKey) -> str:
+        """Row encoding of a programmed wordline."""
+        return self._encoding_of[wl]
+
     def expected(self, wl: WordlineKey, op: str) -> jnp.ndarray:
-        lsb, msb = self._operands[wl]
+        pages = self._operands[wl]
+        assert len(pages) == 2, \
+            "expected() models 2-operand wordlines; 3-page TLC wordlines " \
+            "need a 3-operand oracle (see tests/test_cross_encoding.py)"
+        lsb, msb = pages
         return mcflash.expected_result(op, lsb, msb)

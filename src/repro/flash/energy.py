@@ -21,8 +21,12 @@ class EnergyModel:
     e_prog_uj_kb: float = 12.0
     mws_extra_per_block: float = 0.34  # Flash-Cosmos inter-block overhead
 
-    def read_energy_uj_kb(self, op: str) -> float:
-        return self.e_fixed_uj_kb + OP_SENSING_PHASES[op] * self.e_sense_uj_kb
+    def read_energy_uj_kb(self, op: str, phases: int | None = None) -> float:
+        """Per-kB read energy; ``phases`` overrides the MLC Table-1 lookup
+        for multi-level-encoding plans that carry their own phase count."""
+        if phases is None:
+            phases = OP_SENSING_PHASES[op]
+        return self.e_fixed_uj_kb + phases * self.e_sense_uj_kb
 
     def mcflash_op_energy_uj_kb(self, op: str, aligned: bool = True) -> float:
         e = self.read_energy_uj_kb(op)

@@ -7,11 +7,17 @@ as a read with a per-op SET_FEATURE offset set.  This module provides:
 - wear-levelled block allocation (least-P/E free block per plane),
 - **die-affinity placement** (§6 layout): every vector gets a *home die*
   (round-robin across dies unless pinned with ``die=``) and stripes its
-  pages across that die's planes only — so a vector's LSB/MSB co-pages
-  always share a die (one shard gather per sense group) while *independent*
-  vectors spread across dies, which is what lets the compiled executor
-  dispatch their sense groups concurrently on different dies,
-- aligned operand-pair writes (A -> LSB page, B -> MSB page, same wordline),
+  pages across that die's planes only — so a vector's co-pages always share
+  a die (one shard gather per sense group) while *independent* vectors
+  spread across dies, which is what lets the compiled executor dispatch
+  their sense groups concurrently on different dies,
+- **encoding-aware co-location** (§7): each vector carries the row encoding
+  it was programmed under.  MLC / reduced-MLC wordlines co-locate operand
+  *pairs* on the shared LSB/MSB pages; TLC wordlines co-locate operand
+  *triples* on LSB/CSB/MSB, which is what gives the executor its 3-operand
+  single-sense fast paths,
+- aligned operand-group writes (operands assigned shared-page roles in
+  canonical order on the same wordlines),
 - runtime copyback realignment for scattered operands (realigned and
   NOT-ready derived placements inherit the source vector's home die).
 
@@ -23,10 +29,12 @@ keep working while new code talks to the session layer directly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import jax.numpy as jnp
 
+from repro.core import tlc
+from repro.core.tlc import PAGES_PER_WL, ROLES_OF
 from repro.flash.device import FlashDevice, WordlineKey
 
 
@@ -35,12 +43,14 @@ class VectorMeta:
     name: str
     n_bits: int
     pages: List[WordlineKey]          # striped page placement
-    role: str                          # 'lsb' | 'msb' (which shared page)
+    role: str                          # 'lsb' | 'csb' | 'msb' (shared page)
     #: the co-located page holds zeros (scattered writes) — required for
     #: in-flash NOT; losing a pairing does NOT zero the stale co-page.
     zero_co_page: bool = False
     #: home die: all pages stripe across this die's planes (die affinity)
     die: int = 0
+    #: row encoding the vector was programmed under (mlc | tlc | reduced-mlc)
+    encoding: str = tlc.MLC
 
 
 class FTL:
@@ -52,7 +62,9 @@ class FTL:
         self._next_wl: Dict[int, Tuple[int, int]] = {}   # plane -> (block, wl)
         self._wear: Dict[Tuple[int, int], int] = {}
         self.vectors: Dict[str, VectorMeta] = {}
-        self._pair_of: Dict[str, str] = {}
+        #: name -> ordered tuple of ALL names co-located on its wordlines
+        #: (pairs under MLC/reduced-MLC, up to triples under TLC)
+        self._group_of: Dict[str, Tuple[str, ...]] = {}
         self._next_die = 0                               # round-robin home die
         self._session = None
 
@@ -94,17 +106,39 @@ class FTL:
         """Home die of a registered vector."""
         return self.vectors[name].die
 
+    def encoding_of(self, name: str) -> str:
+        """Row encoding of a registered vector."""
+        return self.vectors[name].encoding
+
+    def partner_of(self, name: str) -> "str | None":
+        """The one co-located partner of an MLC-style pair (None when the
+        vector is scattered or lives in a larger TLC group)."""
+        group = self._group_of.get(name, ())
+        if len(group) != 2:
+            return None
+        return group[0] if group[1] == name else group[1]
+
+    def group_of(self, name: str) -> Tuple[str, ...]:
+        """All names co-located on ``name``'s wordlines (empty if scattered)."""
+        return self._group_of.get(name, ())
+
     @staticmethod
     def derived_not_name(name: str) -> str:
         """Name of the NOT-ready derived placement the session may cache."""
         return f"__not__{name}"
 
     def _invalidate(self, name: str) -> None:
-        """Rewriting a vector drops its pairing (both directions) and any
-        derived placements built from its old contents."""
-        partner = self._pair_of.pop(name, None)
-        if partner is not None and self._pair_of.get(partner) == name:
-            del self._pair_of[partner]
+        """Rewriting a vector drops it from its co-location group (remaining
+        members still share THEIR wordlines) and drops any derived placements
+        built from its old contents."""
+        group = self._group_of.pop(name, None)
+        if group is not None:
+            rest = tuple(n for n in group if n != name)
+            for n in rest:
+                if len(rest) >= 2:
+                    self._group_of[n] = rest
+                else:
+                    self._group_of.pop(n, None)
         self.vectors.pop(self.derived_not_name(name), None)
 
     def _paginate(self, bits: jnp.ndarray) -> List[jnp.ndarray]:
@@ -115,47 +149,87 @@ class FTL:
             bits = jnp.pad(bits, (0, pad))
         return [bits[i * pb:(i + 1) * pb] for i in range(bits.shape[0] // pb)]
 
+    def _program_roles(self, placement: List[WordlineKey],
+                       pages_by_role: Dict[str, List[jnp.ndarray]],
+                       encoding: str) -> None:
+        """Program a wordline batch from a role->pages mapping (missing roles
+        are zero-filled), under one row encoding."""
+        n = len(placement)
+        zeros = None
+        pages = {}
+        for role in ROLES_OF[encoding]:
+            got = pages_by_role.get(role)
+            if got is None:
+                if zeros is None:
+                    some = next(iter(pages_by_role.values()))
+                    zeros = [jnp.zeros_like(p) for p in some]
+                got = zeros
+            assert len(got) == n
+            pages[role] = got
+        self.device.program_shared_batch(
+            placement, pages["lsb"], pages["msb"],
+            csb_pages=pages.get("csb"), encoding=encoding)
+
+    def write_group_aligned(self, names: Sequence[str],
+                            bits: Sequence[jnp.ndarray],
+                            die: "int | None" = None,
+                            encoding: str = tlc.MLC) -> None:
+        """Write k operands co-located on shared wordlines (k=2 pairs for
+        MLC / reduced-MLC, k in {2,3} for TLC), striped across one home
+        die's planes (``die=None`` round-robins across dies).  Operands take
+        the encoding's shared-page roles in canonical order; a TLC pair
+        leaves a zero MSB page."""
+        names, bits = list(names), list(bits)
+        roles = ROLES_OF[encoding]
+        assert 2 <= len(names) <= len(roles), \
+            f"{encoding} wordlines co-locate 2..{len(roles)} operands"
+        assert len(set(names)) == len(names), names
+        paged = [self._paginate(b) for b in bits]
+        assert len({len(p) for p in paged}) == 1, \
+            "aligned operands must match in size"
+        for n in names:
+            self._invalidate(n)
+        die = self._home_die(die)
+        placement = self._placement(len(paged[0]), die)
+        self._program_roles(placement,
+                            dict(zip(roles, paged)), encoding)
+        for name, b, role in zip(names, bits, roles):
+            self.vectors[name] = VectorMeta(name, int(b.shape[0]), placement,
+                                            role, die=die, encoding=encoding)
+            self._group_of[name] = tuple(names)
+
     def write_pair_aligned(self, name_a: str, bits_a: jnp.ndarray,
                            name_b: str, bits_b: jnp.ndarray,
-                           die: "int | None" = None) -> None:
-        """Write operands A,B co-located on shared wordlines, striped across
-        one home die's planes (``die=None`` round-robins across dies)."""
-        pages_a = self._paginate(bits_a)
-        pages_b = self._paginate(bits_b)
-        assert len(pages_a) == len(pages_b), "aligned operands must match in size"
-        self._invalidate(name_a)
-        self._invalidate(name_b)
-        die = self._home_die(die)
-        placement = self._placement(len(pages_a), die)
-        self.device.program_shared_batch(placement, pages_a, pages_b)
-        self.vectors[name_a] = VectorMeta(name_a, int(bits_a.shape[0]),
-                                          placement, "lsb", die=die)
-        self.vectors[name_b] = VectorMeta(name_b, int(bits_b.shape[0]),
-                                          placement, "msb", die=die)
-        self._pair_of[name_a] = name_b
-        self._pair_of[name_b] = name_a
+                           die: "int | None" = None,
+                           encoding: str = tlc.MLC) -> None:
+        """Write operands A,B co-located on shared wordlines (A takes the
+        first shared-page role, B the second)."""
+        self.write_group_aligned([name_a, name_b], [bits_a, bits_b],
+                                 die=die, encoding=encoding)
 
     def write_scattered(self, name: str, bits: jnp.ndarray, role: str = "lsb",
-                        die: "int | None" = None) -> None:
-        """Write a single vector without a co-located partner (needs
-        realignment before MCFlash compute) — stored with all-zero co-page."""
+                        die: "int | None" = None,
+                        encoding: str = tlc.MLC) -> None:
+        """Write a single vector without co-located partners (needs
+        realignment before MCFlash compute) — all other shared pages zero."""
+        assert role in ROLES_OF[encoding], (role, encoding)
         self._invalidate(name)
         pages = self._paginate(bits)
         die = self._home_die(die)
         placement = self._placement(len(pages), die)
-        zeros = [jnp.zeros_like(p) for p in pages]
-        if role == "lsb":
-            self.device.program_shared_batch(placement, pages, zeros)
-        else:
-            self.device.program_shared_batch(placement, zeros, pages)
+        self._program_roles(placement, {role: pages}, encoding)
         self.vectors[name] = VectorMeta(name, int(bits.shape[0]), placement,
-                                        role, zero_co_page=True, die=die)
+                                        role, zero_co_page=True, die=die,
+                                        encoding=encoding)
 
     def align(self, name_a: str, name_b: str) -> str:
-        """Copyback-realign two scattered vectors into an aligned pair; returns
-        the name of the merged pair (A becomes LSB, B becomes MSB).  The
-        merged pair lives on A's home die (die affinity is preserved)."""
+        """Copyback-realign two scattered MLC vectors into an aligned pair;
+        returns the name of the merged pair (A becomes LSB, B becomes MSB).
+        The merged pair lives on A's home die (die affinity is preserved)."""
         ma, mb = self.vectors[name_a], self.vectors[name_b]
+        assert ma.encoding == mb.encoding == tlc.MLC, \
+            "align() is the MLC copyback path; use align_group for " \
+            "encoded vectors"
         assert len(ma.pages) == len(mb.pages)
         self._invalidate(name_a)
         self._invalidate(name_b)
@@ -168,41 +242,94 @@ class FTL:
                                           die=ma.die)
         self.vectors[name_b] = VectorMeta(name_b, mb.n_bits, placement, "msb",
                                           die=ma.die)
-        self._pair_of[name_a] = name_b
-        self._pair_of[name_b] = name_a
+        self._group_of[name_a] = self._group_of[name_b] = (name_a, name_b)
         return name_a
 
-    # -- executor lowering helpers --------------------------------------------
-    def pair_for_sense(self, names: List[str]) -> Tuple[List[Tuple[str, str]], "str | None"]:
-        """Pair operand names for shared-wordline senses.
+    def align_group(self, names: Sequence[str]) -> None:
+        """Copyback-realign k same-encoding vectors onto shared wordlines
+        (the generalized multi-level-encoding realignment): each operand's
+        pages are read out on-die and the group reprograms together on the
+        first vector's home die, taking shared-page roles in canonical
+        order.  MLC pairs keep the classic two-read copyback path."""
+        from repro.kernels import ops as kops
 
-        Already-aligned partners pair first (no realignment cost); the rest
-        pair greedily (each costs one copyback realignment, the paper's
-        non-aligned path).  An odd leftover is read out as its own partial.
+        metas = [self.vectors[n] for n in names]
+        enc = metas[0].encoding
+        assert all(m.encoding == enc for m in metas), \
+            f"cannot co-locate mixed encodings: {[m.encoding for m in metas]}"
+        if enc == tlc.MLC and len(names) == 2:
+            self.align(names[0], names[1])
+            return
+        bits = []
+        for m in metas:
+            packed = self.device.page_read_batch(m.pages, m.role,
+                                                 encoding=enc)
+            bits.append(kops.unpack_bits(packed.reshape(1, -1))[0][: m.n_bits])
+        self.write_group_aligned(list(names), bits, die=metas[0].die,
+                                 encoding=enc)
+
+    # -- executor lowering helpers --------------------------------------------
+    def group_for_sense(self, names: List[str]) -> Tuple[List[Tuple[str, ...]], "str | None"]:
+        """Group same-encoding operand names for shared-wordline senses.
+
+        Already-co-located partners group first (no realignment cost); the
+        rest group greedily up to the encoding's wordline capacity (each
+        group costs one copyback realignment, the paper's non-aligned path).
+        A leftover singleton is read out as its own partial.
         """
+        metas = [self.vectors[n] for n in names]
+        enc = metas[0].encoding
+        assert all(m.encoding == enc for m in metas), \
+            "sense groups must share one encoding (bucket upstream)"
+        cap = PAGES_PER_WL[enc]
         used: set = set()
-        pairs: List[Tuple[str, str]] = []
+        groups: List[Tuple[str, ...]] = []
         rest: List[str] = []
         for i, n in enumerate(names):
             if i in used:
                 continue
-            partner = self._pair_of.get(n)
-            j = next((k for k in range(i + 1, len(names))
-                      if k not in used and names[k] == partner), None)
-            if j is not None:
-                pairs.append((n, partner))
-                used.update((i, j))
+            used.add(i)
+            idx = [i]
+            for p in self._group_of.get(n, ()):
+                if p == n or len(idx) >= cap:
+                    continue
+                j = next((k for k in range(len(names))
+                          if k not in used and names[k] == p), None)
+                if j is not None:
+                    idx.append(j)
+                    used.add(j)
+            if len(idx) > 1:
+                groups.append(tuple(names[k] for k in idx))
             else:
                 rest.append(n)
-                used.add(i)
         while len(rest) >= 2:
-            pairs.append((rest.pop(0), rest.pop(0)))
-        return pairs, (rest[0] if rest else None)
+            take, rest = rest[:cap], rest[cap:]
+            groups.append(tuple(take))
+        return groups, (rest[0] if rest else None)
+
+    def pair_for_sense(self, names: List[str]) -> Tuple[List[Tuple[str, str]], "str | None"]:
+        """MLC-era alias of :meth:`group_for_sense` (groups are pairs)."""
+        groups, leftover = self.group_for_sense(names)
+        return [tuple(g) for g in groups], leftover
 
     def ensure_aligned(self, name_a: str, name_b: str) -> None:
         """Copyback-realign A,B unless they already share wordlines."""
-        if self._pair_of.get(name_a) != name_b:
+        if self.partner_of(name_a) != name_b:
             self.align(name_a, name_b)
+
+    def ensure_colocated(self, names: Sequence[str]) -> None:
+        """Copyback-realign a group unless its (distinct) members already
+        share wordlines.  Duplicate operand names need no realignment: the
+        encoded plan just reads the shared role twice."""
+        distinct = list(dict.fromkeys(names))
+        if len(distinct) == 1:
+            return                     # one vector: its role reads in place
+        group = self._group_of.get(distinct[0], ())
+        pages = self.vectors[distinct[0]].pages
+        if all(n in group for n in distinct) and \
+                all(self.vectors[n].pages == pages for n in distinct):
+            return
+        self.align_group(distinct)
 
     def ensure_not_ready(self, name: str, *, backend=None) -> VectorMeta:
         """Placement for an in-flash NOT: the operand must sit in the MSB page
@@ -214,7 +341,9 @@ class FTL:
         from repro.kernels import ops as kops
 
         meta = self.vectors[name]
-        if meta.role == "msb" and meta.zero_co_page and name not in self._pair_of:
+        assert meta.encoding == tlc.MLC, \
+            "encoded wordlines run NOT as a direct inverse role read"
+        if meta.role == "msb" and meta.zero_co_page and not self.group_of(name):
             return meta
         copy = self.derived_not_name(name)
         if copy not in self.vectors:

@@ -25,13 +25,21 @@ class TimingModel:
     t_dma_us: float = 51.0            # 4 planes x 16 kB -> controller
     t_ext_us: float = 122.0           # 1 MB controller -> host
 
-    def read_latency_us(self, op: str) -> float:
-        """MCFlash op latency = page read with the op's sensing-phase count."""
-        return self.t_fixed_us + OP_SENSING_PHASES[op] * self.t_sense_us
+    def read_latency_us(self, op: str, phases: int | None = None) -> float:
+        """MCFlash op latency = page read with the op's sensing-phase count.
 
-    def op_latency_us(self, op: str, switch_op: bool = True) -> float:
+        ``phases`` overrides the MLC Table-1 lookup — multi-level-encoding
+        plans (TLC / reduced-MLC parity reads) carry their own phase count.
+        """
+        if phases is None:
+            phases = OP_SENSING_PHASES[op]
+        return self.t_fixed_us + phases * self.t_sense_us
+
+    def op_latency_us(self, op: str, switch_op: bool = True,
+                      phases: int | None = None) -> float:
         """Read latency + SET_FEATURE offset reprogramming when switching ops."""
-        return self.read_latency_us(op) + (self.t_setfeature_us if switch_op else 0.0)
+        return (self.read_latency_us(op, phases)
+                + (self.t_setfeature_us if switch_op else 0.0))
 
 
 # ------------------------- Fig 9 system timelines -------------------------

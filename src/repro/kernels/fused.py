@@ -27,25 +27,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.mlc_sense import _sense_bits, pad_refs
+
 LANES = 128
 WORD_BITS = 32
 TILE_COLS = LANES * WORD_BITS  # 4096
 ROW_TILE = 8                   # sublane-aligned row tile
 
 
-def _sense_tile(v: jnp.ndarray, refs_ref, kind: str, invert: bool) -> jnp.ndarray:
-    """One (ROW_TILE, TILE_COLS) Vth tile -> boolean sense result."""
-    if kind == "lsb":
-        bits = v < refs_ref[0]
-    elif kind == "msb":
-        bits = (v < refs_ref[0]) | (v > refs_ref[1])
-    elif kind == "sbr":
-        neg = (v < refs_ref[0]) | (v > refs_ref[1])
-        pos = (v < refs_ref[2]) | (v > refs_ref[3])
-        bits = jnp.logical_not(neg ^ pos)
-    else:
-        raise ValueError(kind)
-    return jnp.logical_not(bits) if invert else bits
+def _sense_tile(v: jnp.ndarray, refs_ref, kind: str, invert: bool,
+                n_refs: int = 0) -> jnp.ndarray:
+    """One (ROW_TILE, TILE_COLS) Vth tile -> boolean sense result (the one
+    read-kind implementation shared with the standalone sense kernel)."""
+    return _sense_bits(refs_ref, v, kind, invert, n_refs)
 
 
 def _combine(acc: jnp.ndarray, nxt: jnp.ndarray, op: str) -> jnp.ndarray:
@@ -73,28 +67,29 @@ def _popcount(v: jnp.ndarray) -> jnp.ndarray:
 
 
 def _sense_reduce_acc(refs_ref, vth_ref, *, n: int, kind: str,
-                      sense_invert: bool, op: str, invert: bool) -> jnp.ndarray:
+                      sense_invert: bool, op: str, invert: bool,
+                      n_refs: int) -> jnp.ndarray:
     """Shared body: sense all n operand tiles, fold into one bool accumulator."""
-    acc = _sense_tile(vth_ref[0], refs_ref, kind, sense_invert)
+    acc = _sense_tile(vth_ref[0], refs_ref, kind, sense_invert, n_refs)
     for k in range(1, n):                       # static unroll over operands
         acc = _combine(acc, _sense_tile(vth_ref[k], refs_ref, kind,
-                                        sense_invert), op)
+                                        sense_invert, n_refs), op)
     return jnp.logical_not(acc) if invert else acc
 
 
 def _sense_reduce_kernel(refs_ref, vth_ref, out_ref, *, n, kind,
-                         sense_invert, op, invert):
+                         sense_invert, op, invert, n_refs):
     out_ref[...] = _pack(_sense_reduce_acc(
         refs_ref, vth_ref, n=n, kind=kind, sense_invert=sense_invert,
-        op=op, invert=invert))
+        op=op, invert=invert, n_refs=n_refs))
 
 
 def _sense_reduce_popcount_kernel(refs_ref, vth_ref, mask_ref, out_ref, *, n,
-                                  kind, sense_invert, op, invert):
+                                  kind, sense_invert, op, invert, n_refs):
     j = pl.program_id(1)
     words = _pack(_sense_reduce_acc(
         refs_ref, vth_ref, n=n, kind=kind, sense_invert=sense_invert,
-        op=op, invert=invert)) & mask_ref[...]
+        op=op, invert=invert, n_refs=n_refs)) & mask_ref[...]
     pc = _popcount(words)                       # (ROW_TILE, LANES)
 
     @pl.when(j == 0)
@@ -115,22 +110,24 @@ def _check_shapes(vth: jnp.ndarray) -> tuple[int, int, int]:
 
 
 @functools.partial(jax.jit, static_argnames=("kind", "sense_invert", "op",
-                                             "invert", "interpret"))
+                                             "invert", "n_refs", "interpret"))
 def sense_reduce(vth: jnp.ndarray, refs: jnp.ndarray, *, kind: str,
                  sense_invert: bool, op: str, invert: bool = False,
-                 interpret: bool = True) -> jnp.ndarray:
+                 n_refs: int = 0, interpret: bool = True) -> jnp.ndarray:
     """Fused chain: (N, R, C) Vth -> (R, C//32) packed op-reduction.
 
     Each of the N operands is sensed with the same ``refs``/``kind`` (and
     per-sense inverse-read when ``sense_invert``), folded with ``op``, with
-    an optional final inversion — all inside one kernel.
+    an optional final inversion — all inside one kernel.  ``n_refs`` is
+    required (and used) only by kind='parity'.
     """
     n, r, c = _check_shapes(vth)
-    refs = jnp.asarray(refs, jnp.float32).reshape(4)
+    refs = pad_refs(refs)
     grid = (r // ROW_TILE, c // TILE_COLS)
     return pl.pallas_call(
         functools.partial(_sense_reduce_kernel, n=n, kind=kind,
-                          sense_invert=sense_invert, op=op, invert=invert),
+                          sense_invert=sense_invert, op=op, invert=invert,
+                          n_refs=n_refs),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
@@ -146,10 +143,10 @@ def sense_reduce(vth: jnp.ndarray, refs: jnp.ndarray, *, kind: str,
 
 
 @functools.partial(jax.jit, static_argnames=("kind", "sense_invert", "op",
-                                             "invert", "interpret"))
+                                             "invert", "n_refs", "interpret"))
 def sense_reduce_popcount(vth: jnp.ndarray, refs: jnp.ndarray,
                           mask: jnp.ndarray, *, kind: str, sense_invert: bool,
-                          op: str, invert: bool = False,
+                          op: str, invert: bool = False, n_refs: int = 0,
                           interpret: bool = True) -> jnp.ndarray:
     """Fused chain + popcount: (N, R, C) Vth -> (R,) int32 bit counts.
 
@@ -160,11 +157,12 @@ def sense_reduce_popcount(vth: jnp.ndarray, refs: jnp.ndarray,
     """
     n, r, c = _check_shapes(vth)
     assert mask.shape == (r, c // WORD_BITS), mask.shape
-    refs = jnp.asarray(refs, jnp.float32).reshape(4)
+    refs = pad_refs(refs)
     grid = (r // ROW_TILE, c // TILE_COLS)
     lanes = pl.pallas_call(
         functools.partial(_sense_reduce_popcount_kernel, n=n, kind=kind,
-                          sense_invert=sense_invert, op=op, invert=invert),
+                          sense_invert=sense_invert, op=op, invert=invert,
+                          n_refs=n_refs),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,

@@ -24,10 +24,12 @@ LANES = 128
 WORD_BITS = 32
 TILE_COLS = LANES * WORD_BITS  # 4096
 ROW_TILE = 8                   # sublane-aligned row tile
+MAX_REFS = 8                   # widest reference stack (TLC XOR3 needs 7)
 
 
-def _sense_kernel(refs_ref, vth_ref, out_ref, *, kind: str, invert: bool):
-    v = vth_ref[...]                                   # (ROW_TILE, TILE_COLS) f32
+def _sense_bits(refs_ref, v: jnp.ndarray, kind: str, invert: bool,
+                n_refs: int) -> jnp.ndarray:
+    """Apply the read kind's reference comparisons to one Vth tile."""
     if kind == "lsb":
         bits = v < refs_ref[0]
     elif kind == "msb":
@@ -36,30 +38,55 @@ def _sense_kernel(refs_ref, vth_ref, out_ref, *, kind: str, invert: bool):
         neg = (v < refs_ref[0]) | (v > refs_ref[1])
         pos = (v < refs_ref[2]) | (v > refs_ref[3])
         bits = jnp.logical_not(neg ^ pos)
+    elif kind == "parity":
+        # Generalized multi-reference read (TLC / 8-state encodings): the
+        # references sit at the valleys where the target band pattern flips,
+        # so bit = 1 iff an even number of references lie below the cell.
+        assert 1 <= n_refs <= MAX_REFS, n_refs
+        odd = v > refs_ref[0]
+        for i in range(1, n_refs):              # static unroll over refs
+            odd = odd ^ (v > refs_ref[i])
+        bits = jnp.logical_not(odd)
     else:
         raise ValueError(kind)
-    if invert:
-        bits = jnp.logical_not(bits)
+    return jnp.logical_not(bits) if invert else bits
+
+
+def _sense_kernel(refs_ref, vth_ref, out_ref, *, kind: str, invert: bool,
+                  n_refs: int):
+    v = vth_ref[...]                                   # (ROW_TILE, TILE_COLS) f32
+    bits = _sense_bits(refs_ref, v, kind, invert, n_refs)
     # Lane-major pack: reduction over the 32 sublane groups, lanes stay 128.
     b = bits.astype(jnp.uint32).reshape(v.shape[0], WORD_BITS, LANES)
     shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)[None, :, None]
     out_ref[...] = jnp.sum(b << shifts, axis=1, dtype=jnp.uint32)
 
 
-@functools.partial(jax.jit, static_argnames=("kind", "invert", "interpret"))
+def pad_refs(refs: jnp.ndarray) -> jnp.ndarray:
+    """Zero-pad a reference vector to the fixed (MAX_REFS,) SMEM slot."""
+    refs = jnp.asarray(refs, jnp.float32).reshape(-1)
+    assert refs.shape[0] <= MAX_REFS, refs.shape
+    return jnp.pad(refs, (0, MAX_REFS - refs.shape[0]))
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "invert", "n_refs",
+                                             "interpret"))
 def mlc_sense(vth: jnp.ndarray, refs: jnp.ndarray, *, kind: str,
-              invert: bool = False, interpret: bool = True) -> jnp.ndarray:
+              invert: bool = False, n_refs: int = 0,
+              interpret: bool = True) -> jnp.ndarray:
     """Sense a (R, C) Vth array into packed (R, C//32) uint32 bits.
 
     R % 8 == 0 and C % 4096 == 0 (use repro.kernels.ops.pad_rows otherwise).
+    ``n_refs`` is required (and used) only by kind='parity'.
     """
     r, c = vth.shape
     assert r % ROW_TILE == 0, f"rows {r} must be a multiple of {ROW_TILE}"
     assert c % TILE_COLS == 0, f"cols {c} must be a multiple of {TILE_COLS}"
-    refs = jnp.asarray(refs, jnp.float32).reshape(4)
+    refs = pad_refs(refs)
     grid = (r // ROW_TILE, c // TILE_COLS)
     return pl.pallas_call(
-        functools.partial(_sense_kernel, kind=kind, invert=invert),
+        functools.partial(_sense_kernel, kind=kind, invert=invert,
+                          n_refs=n_refs),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,

@@ -18,6 +18,8 @@ LANES = kernel_ref.LANES
 WORD_BITS = kernel_ref.WORD_BITS
 TILE_COLS = kernel_ref.TILE_COLS
 ROW_TILE = _mlc.ROW_TILE
+MAX_REFS = kernel_ref.MAX_REFS
+pad_refs = _mlc.pad_refs
 
 
 def _default_interpret() -> bool:
@@ -34,26 +36,27 @@ def pad_rows(x: jnp.ndarray, multiple: int = ROW_TILE) -> tuple[jnp.ndarray, int
 
 
 def mlc_sense(vth: jnp.ndarray, refs, *, kind: str, invert: bool = False,
-              interpret: bool | None = None) -> jnp.ndarray:
+              n_refs: int = 0, interpret: bool | None = None) -> jnp.ndarray:
     """Fused sense+pack: (R, C) Vth -> (R, C//32) packed uint32."""
     if interpret is None:
         interpret = _default_interpret()
     padded, r = pad_rows(vth)
     out = _mlc.mlc_sense(padded, jnp.asarray(refs, jnp.float32),
-                         kind=kind, invert=invert, interpret=interpret)
+                         kind=kind, invert=invert, n_refs=n_refs,
+                         interpret=interpret)
     return out[:r]
 
 
 def sense_plan(vth: jnp.ndarray, plan, *, interpret: bool | None = None) -> jnp.ndarray:
     """Run a repro.core.mcflash.ReadPlan through the Pallas sense kernel."""
-    refs = list(plan.refs) + [0.0] * (4 - len(plan.refs))
-    return mlc_sense(vth, refs, kind=plan.kind, invert=plan.uses_inverse,
-                     interpret=interpret)
+    refs, kind, sense_invert, n_refs = _plan_parts(plan)
+    return mlc_sense(vth, refs, kind=kind, invert=sense_invert,
+                     n_refs=n_refs, interpret=interpret)
 
 
-def _plan_parts(plan) -> tuple[list, str, bool]:
-    refs = list(plan.refs) + [0.0] * (4 - len(plan.refs))
-    return refs, plan.kind, plan.uses_inverse
+def _plan_parts(plan) -> tuple[tuple, str, bool, int]:
+    # refs go through unpadded: the kernels pad to MAX_REFS via pad_refs
+    return tuple(plan.refs), plan.kind, plan.uses_inverse, len(plan.refs)
 
 
 def sense_reduce_plan(vth: jnp.ndarray, plan, *, op: str, invert: bool = False,
@@ -62,14 +65,14 @@ def sense_reduce_plan(vth: jnp.ndarray, plan, *, op: str, invert: bool = False,
     op-reduction, without round-tripping per-operand partials through HBM."""
     if interpret is None:
         interpret = _default_interpret()
-    refs, kind, sense_invert = _plan_parts(plan)
+    refs, kind, sense_invert, n_refs = _plan_parts(plan)
     n, r, c = vth.shape
     pad_r = (-r) % ROW_TILE
     if pad_r:
         vth = jnp.pad(vth, ((0, 0), (0, pad_r), (0, 0)))
     out = _fused.sense_reduce(vth, jnp.asarray(refs, jnp.float32), kind=kind,
                               sense_invert=sense_invert, op=op, invert=invert,
-                              interpret=interpret)
+                              n_refs=n_refs, interpret=interpret)
     return out[:r]
 
 
@@ -79,7 +82,7 @@ def sense_reduce_popcount_plan(vth: jnp.ndarray, plan, mask: jnp.ndarray, *,
     """Fused megakernel + masked popcount: (N, R, C) Vth -> (R,) int32."""
     if interpret is None:
         interpret = _default_interpret()
-    refs, kind, sense_invert = _plan_parts(plan)
+    refs, kind, sense_invert, n_refs = _plan_parts(plan)
     n, r, c = vth.shape
     pad_r = (-r) % ROW_TILE
     if pad_r:
@@ -88,7 +91,8 @@ def sense_reduce_popcount_plan(vth: jnp.ndarray, plan, mask: jnp.ndarray, *,
     out = _fused.sense_reduce_popcount(vth, jnp.asarray(refs, jnp.float32),
                                        mask, kind=kind,
                                        sense_invert=sense_invert, op=op,
-                                       invert=invert, interpret=interpret)
+                                       invert=invert, n_refs=n_refs,
+                                       interpret=interpret)
     return out[:r]
 
 

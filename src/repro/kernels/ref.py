@@ -15,6 +15,9 @@ import jax.numpy as jnp
 LANES = 128
 WORD_BITS = 32
 TILE_COLS = LANES * WORD_BITS  # 4096 cells -> 128 uint32 words
+#: widest reference stack any read plan may carry (TLC XOR3 needs 7: one
+#: reference in every inter-state valley of the 8-state encoding)
+MAX_REFS = 8
 
 
 def pack_bits(bits: jnp.ndarray) -> jnp.ndarray:
@@ -40,12 +43,15 @@ def unpack_bits(words: jnp.ndarray) -> jnp.ndarray:
 
 
 def mlc_sense(vth: jnp.ndarray, refs: jnp.ndarray, kind: str,
-              invert: bool = False) -> jnp.ndarray:
+              invert: bool = False, n_refs: int | None = None) -> jnp.ndarray:
     """Oracle for the fused sense+pack kernel.
 
-    vth: (R, C) float32, C % 4096 == 0.   refs: (4,) float32 —
+    vth: (R, C) float32, C % 4096 == 0.   refs: (>=4,) float32 —
       kind='lsb' uses refs[0]; 'msb' uses refs[0:2] (VREF0, VREF2);
-      'sbr' uses refs[0:2] as negative and refs[2:4] as positive sensing.
+      'sbr' uses refs[0:2] as negative and refs[2:4] as positive sensing;
+      kind='parity' uses refs[0:n_refs]: the generalized multi-reference
+      read (TLC / 8-state encodings) — bit = 1 iff the cell sits in an
+      even band, i.e. an even number of references lie below its Vth.
     Returns packed uint32 (R, C // 32).
     """
     if kind == "lsb":
@@ -56,6 +62,12 @@ def mlc_sense(vth: jnp.ndarray, refs: jnp.ndarray, kind: str,
         neg = (vth < refs[0]) | (vth > refs[1])
         pos = (vth < refs[2]) | (vth > refs[3])
         bits = ~(neg ^ pos)
+    elif kind == "parity":
+        assert n_refs is not None and 1 <= n_refs <= MAX_REFS, n_refs
+        odd = vth > refs[0]
+        for i in range(1, n_refs):
+            odd = odd ^ (vth > refs[i])
+        bits = ~odd
     else:
         raise ValueError(kind)
     if invert:
@@ -81,7 +93,8 @@ def bitwise_reduce(stack: jnp.ndarray, op: str, invert: bool = False) -> jnp.nda
 
 
 def sense_reduce(vth: jnp.ndarray, refs: jnp.ndarray, kind: str,
-                 sense_invert: bool, op: str, invert: bool = False) -> jnp.ndarray:
+                 sense_invert: bool, op: str, invert: bool = False,
+                 n_refs: int | None = None) -> jnp.ndarray:
     """Oracle for the fused sense->reduce megakernel.
 
     vth: (N, R, C) float32 — N same-plan operands of R pages each.  Each
@@ -90,16 +103,19 @@ def sense_reduce(vth: jnp.ndarray, refs: jnp.ndarray, kind: str,
     Returns packed uint32 (R, C // 32).
     """
     n, r, c = vth.shape
-    packed = mlc_sense(vth.reshape(n * r, c), refs, kind, invert=sense_invert)
+    packed = mlc_sense(vth.reshape(n * r, c), refs, kind, invert=sense_invert,
+                       n_refs=n_refs)
     return bitwise_reduce(packed.reshape(n, r, -1), op, invert)
 
 
 def sense_reduce_popcount(vth: jnp.ndarray, refs: jnp.ndarray,
                           mask: jnp.ndarray, kind: str, sense_invert: bool,
-                          op: str, invert: bool = False) -> jnp.ndarray:
+                          op: str, invert: bool = False,
+                          n_refs: int | None = None) -> jnp.ndarray:
     """Oracle for the fused sense->reduce->popcount megakernel: (R,) counts
     of the masked reduction (mask zeroes page-padding bits)."""
-    words = sense_reduce(vth, refs, kind, sense_invert, op, invert) & mask
+    words = sense_reduce(vth, refs, kind, sense_invert, op, invert,
+                         n_refs=n_refs) & mask
     return popcount_rows(words)
 
 

@@ -76,6 +76,66 @@ def test_reduced_mode_near_zero_rber_when_worn(chip, operands):
     assert and_err / n < 2e-5  # the AND valley margin is the widest
 
 
+def test_valley_references_sit_exactly_mid_window(chip):
+    """Every read reference lands exactly between prog_hi[i] and
+    prog_lo[i+1] (erase_hi | prog_lo[0] for the first valley), i.e. the
+    margin to the state above equals the margin to the state below."""
+    edges_hi = (chip.erase_hi,) + chip.prog_hi      # top edge of state s
+    for i in range(7):
+        ref = chip.valley(i)
+        assert ref == pytest.approx(0.5 * (edges_hi[i] + chip.prog_lo[i]))
+        assert ref - edges_hi[i] == pytest.approx(chip.prog_lo[i] - ref)
+    vals = tlc.valleys(chip)
+    assert vals == tuple(chip.valley(i) for i in range(7))
+    assert all(a < b for a, b in zip(vals, vals[1:]))   # strictly increasing
+
+
+def test_band_patterns_exact_at_state_window_edges(chip):
+    """Cells programmed EXACTLY at a state's verify-window edges (the
+    worst-case fresh Vth) still decode to every op's band pattern — the
+    boundary the mid-valley reference placement guarantees."""
+    from repro.core import mcflash
+
+    states, edges = [], []
+    for s in range(8):
+        lo = chip.erase_hi - 3.0 if s == 0 else chip.prog_lo[s - 1]
+        hi = chip.erase_hi if s == 0 else chip.prog_hi[s - 1]
+        states += [s, s]
+        edges += [lo, hi]
+    vth = jnp.asarray(edges, jnp.float32)
+    cases = [("and", ("lsb", "csb", "msb")), ("or", ("lsb", "csb", "msb")),
+             ("xor", ("lsb", "csb", "msb")), ("nand", ("lsb", "csb", "msb")),
+             ("and", ("lsb", "msb")), ("xnor", ("csb", "msb")),
+             ("read", ("lsb",)), ("read", ("csb",)), ("read", ("msb",)),
+             ("not", ("msb",))]
+    for op, roles in cases:
+        pattern = tlc.op_pattern(op, roles, tlc.TLC)
+        plan = tlc.plan_encoded(op, roles, chip, tlc.TLC)
+        got = np.asarray(mcflash.execute_plan(plan, vth))
+        want = np.asarray([pattern[s] for s in states], np.uint8)
+        np.testing.assert_array_equal(got, want, err_msg=f"{op} {roles}")
+    # XOR3's band pattern alternates every state: the full 7-reference comb
+    assert len(tlc.plan_encoded("xor", ("lsb", "csb", "msb"),
+                                chip, tlc.TLC).refs) == 7
+
+
+def test_reduced_mlc_valleys_widen_margins(chip):
+    """Reduced-MLC references sit mid-way between the OCCUPIED states
+    {L0, L2, L5, L7}; the narrowest reduced margin is at least twice the
+    native TLC margin (the §7 robustness mechanism)."""
+    vals = tlc.valleys(chip, tlc.REDUCED_MLC)
+    assert len(vals) == 3
+    edges_hi = (chip.erase_hi,) + chip.prog_hi
+    margins = []
+    for ref, lo, hi in zip(vals, tlc.REDUCED_STATES, tlc.REDUCED_STATES[1:]):
+        top_of_lo, bot_of_hi = edges_hi[lo], chip.prog_lo[hi - 1]
+        assert top_of_lo < ref < bot_of_hi
+        assert ref - top_of_lo == pytest.approx(bot_of_hi - ref)
+        margins.append(ref - top_of_lo)
+    native = [chip.valley(i) - edges_hi[i] for i in range(7)]
+    assert min(margins) >= 2 * min(native)
+
+
 def test_and3_single_phase_advantage():
     """A 3-operand TLC AND costs ONE sensing phase (40 us) where the MLC
     chain needs two AND senses + a combine (>= 80 us)."""
