@@ -1,0 +1,96 @@
+"""Chrome trace-event schema checker for exported device timelines.
+
+Usage: ``python -m benchmarks.check_trace trace.json [trace2.json ...]``
+
+Fails loudly (non-zero exit) if a file is not a well-formed Chrome
+trace-event JSON of the shape :meth:`repro.obs.Tracer.to_chrome` emits:
+
+- top level is an object with a ``traceEvents`` list;
+- every event has ``name``/``ph``/``pid``/``tid`` and, for X/i events, a
+  numeric ``ts``; complete ("X") events also need a numeric ``dur >= 0``;
+- on the virtual-device process (pid 1) the spans of each lane
+  (``(pid, tid)``) never overlap — the ledger's schedule-step model
+  dispatches one step per resource at a time;
+- the recorded ``otherData.makespan_us`` equals the longest device lane.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+DEVICE_PID = 1
+VALID_PH = {"X", "M", "i", "B", "E"}
+
+
+def check_trace(path: str) -> dict:
+    """Validate one trace file; returns summary stats or raises ValueError."""
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or not isinstance(doc.get("traceEvents"), list):
+        raise ValueError(f"{path}: top level must be an object with a "
+                         "'traceEvents' list")
+    events = doc["traceEvents"]
+    lanes: dict[tuple, list] = {}
+    n_x = n_meta = n_instant = 0
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            raise ValueError(f"{path}: event #{i} is not an object")
+        for key in ("name", "ph", "pid", "tid"):
+            if key not in ev:
+                raise ValueError(f"{path}: event #{i} ({ev.get('name')!r}) "
+                                 f"missing {key!r}")
+        if ev["ph"] not in VALID_PH:
+            raise ValueError(f"{path}: event #{i} has unknown ph={ev['ph']!r}")
+        if ev["ph"] == "M":
+            n_meta += 1
+            continue
+        if not isinstance(ev.get("ts"), (int, float)):
+            raise ValueError(f"{path}: event #{i} ({ev['name']!r}) has "
+                             f"non-numeric ts={ev.get('ts')!r}")
+        if ev["ph"] == "i":
+            n_instant += 1
+            continue
+        if ev["ph"] == "X":
+            n_x += 1
+            if not isinstance(ev.get("dur"), (int, float)) or ev["dur"] < 0:
+                raise ValueError(f"{path}: X event #{i} ({ev['name']!r}) has "
+                                 f"bad dur={ev.get('dur')!r}")
+            lanes.setdefault((ev["pid"], ev["tid"]), []).append(
+                (ev["ts"], ev["ts"] + ev["dur"], ev["name"]))
+    if n_x == 0:
+        raise ValueError(f"{path}: no complete ('X') span events")
+
+    device_end = 0.0
+    for (pid, tid), spans in lanes.items():
+        spans.sort()
+        if pid == DEVICE_PID:
+            device_end = max(device_end, spans[-1][1])
+            for (s0, e0, n0), (s1, e1, n1) in zip(spans, spans[1:]):
+                if s1 < e0 - 1e-9:
+                    raise ValueError(
+                        f"{path}: lane (pid={pid}, tid={tid}) overlap: "
+                        f"{n0!r} [{s0}, {e0}) vs {n1!r} [{s1}, {e1})")
+
+    makespan = doc.get("otherData", {}).get("makespan_us")
+    if makespan is not None and abs(device_end - makespan) > 1e-6 * max(1.0, makespan):
+        raise ValueError(f"{path}: longest device lane ends at {device_end} "
+                         f"but otherData.makespan_us={makespan}")
+    return {"events": len(events), "spans": n_x, "meta": n_meta,
+            "instants": n_instant, "lanes": len(lanes),
+            "device_end_us": device_end}
+
+
+def main(argv: list) -> int:
+    if not argv:
+        print("usage: python -m benchmarks.check_trace trace.json [...]",
+              file=sys.stderr)
+        return 2
+    for path in argv:
+        stats = check_trace(path)
+        print(f"OK {path}: {stats['spans']} spans on {stats['lanes']} lanes, "
+              f"device timeline ends at {stats['device_end_us']:.1f}us")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

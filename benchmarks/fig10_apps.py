@@ -14,6 +14,7 @@ host oracle before its analytic projection is reported.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
@@ -31,7 +32,7 @@ PAPER = {
 }
 
 
-def main(quick: bool = True) -> None:
+def main(quick: bool = True, trace: "str | None" = None) -> None:
     sweeps = {
         "image_segmentation": [image_segmentation(n)
                                for n in (10_000, 50_000, 100_000, 200_000)],
@@ -41,9 +42,10 @@ def main(quick: bool = True) -> None:
     }
     # small-page device for the functional single-wave validation runs
     cfg = SSDConfig(page_kb=2) if quick else SSDConfig()
+    sess = None
     for name, wls in sweeps.items():
-        functional = wls[0].run_functional(
-            session=ComputeSession(config=cfg, backend="pallas"))
+        sess = ComputeSession(config=cfg, backend="pallas", trace=bool(trace))
+        functional = wls[0].run_functional(session=sess)
         senses = functional["stats"]["in_flash_senses"]
         measured = functional["measured"]
         # die-parallel dispatch: the workload's operands round-robin across
@@ -66,8 +68,20 @@ def main(quick: bool = True) -> None:
         assert measured["die_parallel_us"] <= measured["serial_us"]
         if wls[0].k_operands > 2:      # multi-pair chains span multiple dies
             assert functional["stats"]["max_concurrent_dies"] > 1
+    if trace and sess is not None:
+        # export the last workload's device timeline (bitmap index — the
+        # longest chain, so the most interesting die-parallel pattern)
+        tr = sess.trace
+        assert abs(tr.makespan_us() - sess.ledger.makespan_us()) < 1e-6
+        emit("fig10_trace", tr.makespan_us(), f"path={tr.export(trace)}")
+        print(tr.report(sess.ledger))
     write_json("BENCH_apps.json")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", nargs="?", const="trace_fig10.json",
+                    default=None, metavar="OUT_JSON",
+                    help="export the Chrome trace of the last functional "
+                         "workload run")
+    main(trace=ap.parse_args().trace)

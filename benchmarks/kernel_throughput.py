@@ -59,11 +59,11 @@ def _bench_backends(quick: bool) -> None:
          f"hits={plans.hits};misses={plans.misses}")
 
 
-def _bench_executor(quick: bool) -> None:
+def _bench_executor(quick: bool, trace: "str | None" = None) -> None:
     """End-to-end compiled-executor path: 16-operand AND chain materialize."""
     rng = np.random.default_rng(1)
     sess = ComputeSession(config=SSDConfig(page_kb=2 if quick else 16),
-                          backend="pallas")
+                          backend="pallas", trace=bool(trace))
     n = sess.device.config.page_bits
     vecs = []
     for i in range(0, 16, 2):
@@ -90,12 +90,18 @@ def _bench_executor(quick: bool) -> None:
          f"concurrent_dies={stats['max_concurrent_dies']};"
          f"waves={stats['sense_waves']};shards={stats['arena_shards']}")
     assert led.die_step_us <= led.serial_us()
+    if trace:
+        tr = sess.trace
+        assert abs(tr.makespan_us() - led.makespan_us()) < 1e-6
+        emit("executor_chain16_trace", tr.makespan_us(),
+             f"path={tr.export(trace)}")
+        print(tr.report(led))
 
 
-def main(quick: bool = True) -> None:
+def main(quick: bool = True, trace: "str | None" = None) -> None:
     t0 = time.perf_counter()
     _bench_backends(quick)
-    _bench_executor(quick)
+    _bench_executor(quick, trace=trace)
     emit("kernel_throughput_total", (time.perf_counter() - t0) * 1e6,
          f"quick={int(quick)}")
     write_json("BENCH_kernels.json")
@@ -106,4 +112,8 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true", default=True,
                     help="small shapes (default; CI smoke mode)")
     ap.add_argument("--full", dest="quick", action="store_false")
-    main(quick=ap.parse_args().quick)
+    ap.add_argument("--trace", nargs="?", const="trace_kernels.json",
+                    default=None, metavar="OUT_JSON",
+                    help="export the chain16 executor run's Chrome trace")
+    args = ap.parse_args()
+    main(quick=args.quick, trace=args.trace)

@@ -18,9 +18,9 @@ from repro.api import ComputeSession
 from repro.core import encoding
 
 
-def main(quick: bool = True) -> None:
+def main(quick: bool = True, trace: "str | None" = None) -> None:
     t0 = time.perf_counter()
-    sess = ComputeSession(backend="pallas", seed=0)
+    sess = ComputeSession(backend="pallas", seed=0, trace=bool(trace))
     pages = 2 if quick else 8
     n = pages * sess.device.config.page_bits
     rng = np.random.default_rng(0)
@@ -88,6 +88,20 @@ def main(quick: bool = True) -> None:
              f"plan={plan.describe().replace(',', ';')}")
         assert errors == 0, (op, errors)
         assert per_call == 1, per_call                 # ONE sense group
+    if trace:
+        # device-timeline audit: the exported Chrome trace's longest virtual
+        # lane must equal the ledger's makespan (by construction — fail loud
+        # here so CI catches any drift between the two models)
+        tr, led = sess.trace, sess.ledger
+        assert abs(tr.makespan_us() - led.makespan_us()) <= \
+            1e-6 * max(1.0, led.makespan_us()), \
+            (tr.makespan_us(), led.makespan_us())
+        path = tr.export(trace)
+        emit("table1_trace", tr.makespan_us(),
+             f"path={path};device_spans={len(tr.device_spans)};"
+             f"wall_spans={len(tr.wall_spans)};"
+             f"ledger_makespan_us={led.makespan_us():.2f}")
+        print(tr.report(led))
     emit("table1_total", (time.perf_counter() - t0) * 1e6, f"quick={int(quick)}")
     write_json("BENCH_kernels.json")
 
@@ -96,4 +110,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", default=True)
     ap.add_argument("--full", dest="quick", action="store_false")
-    main(quick=ap.parse_args().quick)
+    ap.add_argument("--trace", nargs="?", const="trace_table1.json",
+                    default=None, metavar="OUT_JSON",
+                    help="export the device-timeline Chrome trace "
+                         "(open in chrome://tracing or ui.perfetto.dev)")
+    args = ap.parse_args()
+    main(quick=args.quick, trace=args.trace)

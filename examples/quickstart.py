@@ -4,7 +4,8 @@ Opens a :class:`repro.api.ComputeSession` on a simulated COTS 3D NAND chip,
 registers two random operand vectors as aligned shared pages, records lazy
 bitwise expressions, and materializes every Table-1 op in-flash (shifted
 reads / SBR through the Pallas sensing kernels), verifying bit-exactness.
-Then prints the plan cache behaviour and the Fig-9 system-level timelines.
+Then prints the plan cache behaviour, the Fig-9 system-level timelines, and
+the traced device timeline of everything this script just executed.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -15,7 +16,7 @@ from repro.core import encoding, rber
 from repro.flash import (TimingModel, isc_time_us, mcflash_time_us,
                          osc_time_us)
 
-sess = ComputeSession(backend="pallas", seed=0)
+sess = ComputeSession(backend="pallas", seed=0, trace=True)
 chip = sess.chip
 print(f"chip: {chip.part_number} ({chip.description})\n")
 
@@ -61,3 +62,8 @@ print(f"  OSC                 {osc_time_us(t):7.0f} us   (paper 2063)")
 print(f"  ISC                 {isc_time_us(t):7.0f} us   (paper 1495)")
 print(f"  MCFlash (aligned)   {mcflash_time_us(t):7.0f} us   (paper 1087)")
 print(f"  MCFlash (realign)   {mcflash_time_us(t, aligned=False):7.0f} us   (paper 1807)")
+
+# every program/sense/DMA above was recorded as a span on its die/channel
+# lane; `sess.trace.export("trace.json")` writes the Perfetto-loadable JSON
+print("\n== traced device timeline of this session ==")
+print(sess.trace.report(sess.ledger))

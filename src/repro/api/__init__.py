@@ -40,6 +40,10 @@ _LAZY = {
     "PallasBackend": "repro.api.backends",
     "get_backend": "repro.api.backends",
     "run_workload": "repro.api.workloads",
+    # observability (repro.obs) — re-exported for session-layer users
+    "Tracer": "repro.obs.trace",
+    "MetricsRegistry": "repro.obs.metrics",
+    "timeline_report": "repro.obs.report",
 }
 
 __all__ = ["ExecutableCache", "Ledger", "PlanCache", *sorted(_LAZY)]

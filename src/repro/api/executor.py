@@ -49,6 +49,7 @@ from repro.api.graph import ASSOCIATIVE, BASE_OF, Leaf, Node, Op
 from repro.core import tlc as _tlc
 from repro.core.mcflash import ReadPlan
 from repro.kernels.fused import ROW_TILE, TILE_COLS
+from repro.obs.trace import traced
 
 __all__ = ["ExecPlan", "Executor", "Wave", "DEFAULT_VMEM_BUDGET_BYTES"]
 
@@ -470,38 +471,64 @@ class Executor:
     # -- internals ---------------------------------------------------------------
     def _execute(self, node: Node, n_bits: int, popcount: bool):
         sess = self.session
-        plan = _Lowering(sess).lower(node)
+        tracer = sess.trace
+        # lowering (placement resolution) runs on the host wall clock; the
+        # FTL's realignment copybacks inside it also land as device spans
+        with traced(tracer, "lower", "lower"):
+            plan = _Lowering(sess).lower(node)
         self._account(plan)
         # the cache is per-device (one chip), and signature() leads with the
         # backend name — only interpret mode and the tiling width need adding
         key = (getattr(sess.backend, "interpret", None),
                self.max_fused_operands,
                plan.signature(sess.backend.name), popcount)
-        fn = self.cache.get(key, lambda: self._build(plan, popcount))
+        if tracer is not None:
+            hit = key in self.cache
+            tracer.instant("cache", "executable-hit" if hit
+                           else "executable-miss",
+                           waves=len(plan.waves), groups=len(plan.groups))
+            evictions0 = self.cache.evictions
+
+            def build():
+                with tracer.span("compile", "build-executable",
+                                 waves=len(plan.waves)):
+                    return self._build(plan, popcount)
+        else:
+            def build():
+                return self._build(plan, popcount)
+        fn = self.cache.get(key, build)
+        if tracer is not None and self.cache.evictions > evictions0:
+            tracer.instant("cache", "executable-evicted",
+                           evicted=self.cache.evictions - evictions0)
         dev = sess.device
         # The arena shard-gathers run OUTSIDE the cached executable (one
         # gather per die shard touched), so executable input shapes depend
         # only on the plan signature — shard growth must not retrace cached
         # executables.
-        group_vth = tuple(dev.vth_stack(g.wls) for g in plan.groups)
-        fused_vth = tuple(dev.vth_stack(st.fused.wls) for st in plan.steps
-                          if st.fused is not None)
-        mask = sess.tail_mask(n_bits, plan.out_words)
-        return fn(group_vth, fused_vth, mask)
+        with traced(tracer, "dispatch", "dispatch-waves",
+                    waves=len(plan.waves)):
+            group_vth = tuple(dev.vth_stack(g.wls) for g in plan.groups)
+            fused_vth = tuple(dev.vth_stack(st.fused.wls) for st in plan.steps
+                              if st.fused is not None)
+            mask = sess.tail_mask(n_bits, plan.out_words)
+            return fn(group_vth, fused_vth, mask)
 
     def _account(self, plan: ExecPlan) -> None:
         """Wave-batched ledger + counter updates: ONE parallel die step and
         one channel step per schedule wave (concurrent per-die groups in a
-        wave overlap in the ledger's die-parallel makespan)."""
+        wave overlap in the ledger's die-parallel makespan), each labeled
+        with its wave composition for the device-timeline trace."""
         sess = self.session
         dev = sess.device
+        tracer = sess.trace
         n_fused = n_chunks = 0
-        for wave in plan.waves:
+        for wi, wave in enumerate(plan.waves):
             per_die: Dict[int, float] = {}
             per_ch: Dict[int, float] = {}
             uj = 0.0
             cmds = 0
             units: List[Tuple[Dict[int, float], float, List]] = []
+            parts: List[str] = []
             for gi in wave.groups:
                 g = plan.groups[gi]
                 # the plan's own phase count drives timing/energy — encoded
@@ -512,12 +539,20 @@ class Executor:
                         else dev.page_read_cost(g.wls, g.which,
                                                 phases=g.plan.sensing_phases))
                 units.append((*cost, g.wls))
+                parts.append(f"{g.op_label}x{len(g.wls)}p")
             for si in wave.fused:
                 f = plan.steps[si].fused
                 units.append((*dev.mcflash_cost(
                     f.wls, f.op_label, phases=f.plan.sensing_phases), f.wls))
+                parts.append(f"fused:{f.op_label}x{f.n_operands}")
                 n_fused += 1
                 n_chunks += self._fused_chunks(f.n_operands)
+                sess.metrics.histogram("fused_operands").observe(f.n_operands)
+                if (tracer is not None
+                        and f.n_operands > self.max_fused_operands):
+                    tracer.instant("dispatch", "tiled-megakernel-split",
+                                   operands=f.n_operands,
+                                   passes=self._fused_chunks(f.n_operands))
             for unit_die, unit_uj, wls in units:
                 for die, us in unit_die.items():
                     per_die[die] = per_die.get(die, 0.0) + us
@@ -525,23 +560,27 @@ class Executor:
                     per_ch[ch] = per_ch.get(ch, 0.0) + us
                 uj += unit_uj
                 cmds += len(wls)
+            label = f"wave {wi}: {'+'.join(parts)}" if parts else None
             if per_die:
-                dev.ledger.add_die_batch(per_die, uj, commands=cmds)
+                dev.ledger.add_die_batch(per_die, uj, commands=cmds,
+                                         label=label)
+                sess.metrics.histogram("wave_dies").observe(len(per_die))
             if per_ch:
-                dev.ledger.add_channel_batch(per_ch)
-        sess.in_flash_senses += plan.senses
-        sess.sense_items += plan.items
-        sess.sense_batches += len(plan.groups) + n_fused
-        sess.sense_waves += len(plan.waves)
-        sess.max_concurrent_dies = max(sess.max_concurrent_dies,
-                                       plan.concurrent_dies)
-        sess.megakernel_calls += n_chunks
-        sess.tiled_megakernel_splits += sum(
+                dev.ledger.add_channel_batch(
+                    per_ch, label=f"wave {wi}: dma" if parts else None)
+        m = sess.metrics
+        m.counter("in_flash_senses").add(plan.senses)
+        m.counter("sense_items").add(plan.items)
+        m.counter("sense_batches").add(len(plan.groups) + n_fused)
+        m.counter("sense_waves").add(len(plan.waves))
+        m.gauge("max_concurrent_dies").set_max(plan.concurrent_dies)
+        m.counter("megakernel_calls").add(n_chunks)
+        m.counter("tiled_megakernel_splits").add(sum(
             1 for st in plan.steps if st.fused is not None
-            and st.fused.n_operands > self.max_fused_operands)
-        sess.fused_reduce_calls += sum(
+            and st.fused.n_operands > self.max_fused_operands))
+        m.counter("fused_reduce_calls").add(sum(
             1 for st in plan.steps if len(st.args) > 1 or st.invert
-            or st.fused is not None)
+            or st.fused is not None))
 
     def _build(self, plan: ExecPlan, popcount: bool):
         """Close a jitted executable over the static plan.  Runtime inputs:

@@ -23,11 +23,20 @@ Busy time is tracked two ways:
 A per-category breakdown (sense / program / erase / transfer) supports the
 session's ``stats()`` reporting, and ``max_parallel_dies`` records the
 widest concurrent dispatch observed.
+
+When a :class:`repro.obs.Tracer` is attached (``ledger.tracer``), every
+batched entry additionally emits timed *spans* on virtual per-die /
+per-channel / host-link lanes, with start offsets derived from this same
+schedule-step model — each step's spans start at the timeline's cumulative
+step time, so the exported timeline's longest lane equals ``makespan_us()``
+by construction (see :mod:`repro.obs.trace`).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping
+from typing import Dict, Mapping, Optional
+
+__all__ = ["Ledger"]
 
 
 @dataclasses.dataclass
@@ -46,16 +55,22 @@ class Ledger:
     channel_step_us: float = 0.0
     die_steps: int = 0
     max_parallel_dies: int = 0
+    #: optional repro.obs.Tracer receiving a timed span per entry
+    tracer: Optional[object] = dataclasses.field(default=None, repr=False,
+                                                 compare=False)
 
     def add_die(self, die: int, us: float, uj: float = 0.0,
-                category: str = "sense") -> None:
-        self.add_die_batch({die: us}, uj, commands=1, category=category)
+                category: str = "sense", label: "str | None" = None) -> None:
+        self.add_die_batch({die: us}, uj, commands=1, category=category,
+                           label=label)
 
     def add_die_batch(self, per_die_us: Mapping[int, float], uj: float = 0.0,
-                      commands: int = 1, category: str = "sense") -> None:
+                      commands: int = 1, category: str = "sense",
+                      label: "str | None" = None) -> None:
         """Account one parallel dispatch step in one call (no O(pages) loop):
         ``per_die_us`` is pre-aggregated busy time per die; the named dies
-        run concurrently, so the step takes ``max`` of their busy times."""
+        run concurrently, so the step takes ``max`` of their busy times.
+        ``label`` names the step's spans on an attached tracer."""
         total = 0.0
         for die, us in per_die_us.items():
             self.die_busy_us[die] = self.die_busy_us.get(die, 0.0) + us
@@ -64,14 +79,19 @@ class Ledger:
         self.energy_uj += uj
         self.commands += commands
         if per_die_us:
+            if self.tracer is not None:
+                self.tracer.die_step(self.die_step_us, per_die_us, category,
+                                     label, {"commands": commands})
             self.die_step_us += max(per_die_us.values())
             self.die_steps += 1
             self.max_parallel_dies = max(self.max_parallel_dies, len(per_die_us))
 
-    def add_channel(self, ch: int, us: float) -> None:
-        self.add_channel_batch({ch: us})
+    def add_channel(self, ch: int, us: float,
+                    label: "str | None" = None) -> None:
+        self.add_channel_batch({ch: us}, label=label)
 
-    def add_channel_batch(self, per_channel_us: Mapping[int, float]) -> None:
+    def add_channel_batch(self, per_channel_us: Mapping[int, float],
+                          label: "str | None" = None) -> None:
         """Batched NAND->controller transfer accounting, one parallel step per
         call (channels named together stream concurrently)."""
         total = 0.0
@@ -80,9 +100,14 @@ class Ledger:
             total += us
         self.category_us["dma"] = self.category_us.get("dma", 0.0) + total
         if per_channel_us:
+            if self.tracer is not None:
+                self.tracer.channel_step(self.channel_step_us, per_channel_us,
+                                         label)
             self.channel_step_us += max(per_channel_us.values())
 
-    def add_host(self, us: float) -> None:
+    def add_host(self, us: float, label: "str | None" = None) -> None:
+        if self.tracer is not None:
+            self.tracer.host_step(self.host_busy_us, us, label)
         self.host_busy_us += us
         self.category_us["host"] = self.category_us.get("host", 0.0) + us
 
@@ -99,11 +124,33 @@ class Ledger:
         streaming, and the host link pipeline against each other (outer max)."""
         return max(self.die_step_us, self.channel_step_us, self.host_busy_us)
 
+    def reset(self) -> None:
+        """Zero every accumulator (repeated-materialize benchmark loops call
+        this between iterations instead of rebuilding sessions).  An attached
+        tracer keeps its spans — clear it separately via ``tracer.clear()``."""
+        self.die_busy_us.clear()
+        self.channel_busy_us.clear()
+        self.category_us.clear()
+        self.host_busy_us = 0.0
+        self.energy_uj = 0.0
+        self.commands = 0
+        self.die_step_us = 0.0
+        self.channel_step_us = 0.0
+        self.die_steps = 0
+        self.max_parallel_dies = 0
+
     def summary(self) -> dict:
+        """Every scalar the makespan model derives from — including the
+        three-way ``max`` inputs (``die_parallel_us`` / ``channel_step_us``
+        / ``host_busy_us``), so ``makespan_us`` is reconstructable from the
+        summary dict alone."""
         return {
             "makespan_us": self.makespan_us(),
             "die_parallel_us": self.die_step_us,
+            "channel_step_us": self.channel_step_us,
+            "host_busy_us": self.host_busy_us,
             "serial_us": self.serial_us(),
+            "die_steps": self.die_steps,
             "energy_uj": self.energy_uj,
             "commands": self.commands,
             "max_parallel_dies": self.max_parallel_dies,

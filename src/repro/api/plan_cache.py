@@ -12,7 +12,9 @@ Two levels of compiled artefact are cached here:
   backend), so a repeated materialize of the same expression shape skips
   lowering-to-jaxpr and retracing entirely.
 
-The counters make both caches observable (and testable).
+The hit/miss/eviction counters are typed :class:`repro.obs.Counter` metrics
+in a per-cache :class:`repro.obs.MetricsRegistry` — ``cache.hits`` etc. stay
+readable as plain ints and every existing ``stats()`` key is unchanged.
 """
 from __future__ import annotations
 
@@ -21,6 +23,7 @@ from typing import Callable, Dict, Hashable, Optional, Tuple
 
 from repro.core.mcflash import ReadPlan, plan_op
 from repro.core.vth_model import ChipModel
+from repro.obs.metrics import MetricsRegistry
 
 PlanKey = Tuple[str, ChipModel, bool]
 
@@ -30,9 +33,18 @@ class PlanCache:
 
     def __init__(self) -> None:
         self._plans: Dict[PlanKey, ReadPlan] = {}
-        self.hits = 0
-        self.misses = 0
+        self.metrics = MetricsRegistry()
+        self._hits = self.metrics.counter("hits", "plan cache hits")
+        self._misses = self.metrics.counter("misses", "plans compiled")
         self._miss_counts: Dict[PlanKey, int] = {}
+
+    @property
+    def hits(self) -> int:
+        return int(self._hits.value)
+
+    @property
+    def misses(self) -> int:
+        return int(self._misses.value)
 
     def get(self, op: str, chip: ChipModel, use_inverse_read: bool = True) -> ReadPlan:
         key: PlanKey = (op, chip, bool(use_inverse_read))
@@ -40,10 +52,10 @@ class PlanCache:
         if plan is None:
             plan = plan_op(op, chip, use_inverse_read)
             self._plans[key] = plan
-            self.misses += 1
+            self._misses.add()
             self._miss_counts[key] = self._miss_counts.get(key, 0) + 1
         else:
-            self.hits += 1
+            self._hits.add()
         return plan
 
     def get_encoded(self, op: str, roles: Tuple[str, ...], chip,
@@ -63,10 +75,10 @@ class PlanCache:
         if plan is None:
             plan = self._plans[key] = tlc.plan_encoded(op, tuple(roles), chip,
                                                        encoding)
-            self.misses += 1
+            self._misses.add()
             self._miss_counts[key] = self._miss_counts.get(key, 0) + 1
         else:
-            self.hits += 1
+            self._hits.add()
         return plan
 
     def misses_for(self, op: str, chip: ChipModel, use_inverse_read: bool = True) -> int:
@@ -76,7 +88,7 @@ class PlanCache:
     def clear(self) -> None:
         self._plans.clear()
         self._miss_counts.clear()
-        self.hits = self.misses = 0
+        self.metrics.reset()
 
     def __len__(self) -> int:
         return len(self._plans)
@@ -106,22 +118,35 @@ class ExecutableCache:
         assert capacity is None or capacity >= 1, capacity
         self.capacity = capacity
         self._entries: "OrderedDict[Hashable, object]" = OrderedDict()
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
+        self.metrics = MetricsRegistry()
+        self._hits = self.metrics.counter("hits", "executable replays")
+        self._misses = self.metrics.counter("misses", "executables built")
+        self._evictions = self.metrics.counter("evictions", "LRU evictions")
+
+    @property
+    def hits(self) -> int:
+        return int(self._hits.value)
+
+    @property
+    def misses(self) -> int:
+        return int(self._misses.value)
+
+    @property
+    def evictions(self) -> int:
+        return int(self._evictions.value)
 
     def get(self, key: Hashable, build: Callable[[], object]) -> object:
         entry = self._entries.get(key)
         if entry is None:
             entry = self._entries[key] = build()
-            self.misses += 1
+            self._misses.add()
             if self.capacity is not None:
                 while len(self._entries) > self.capacity:
                     self._entries.popitem(last=False)
-                    self.evictions += 1
+                    self._evictions.add()
         else:
             self._entries.move_to_end(key)
-            self.hits += 1
+            self._hits.add()
         return entry
 
     def __contains__(self, key: Hashable) -> bool:
@@ -129,7 +154,7 @@ class ExecutableCache:
 
     def clear(self) -> None:
         self._entries.clear()
-        self.hits = self.misses = self.evictions = 0
+        self.metrics.reset()
 
     def __len__(self) -> int:
         return len(self._entries)

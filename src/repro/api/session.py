@@ -32,8 +32,22 @@ from repro.core import mcflash as _mcflash
 from repro.core.mcflash import ReadPlan
 from repro.core.vth_model import ChipModel
 from repro.kernels import ops as kops
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
 
 __all__ = ["ComputeSession", "run_op"]
+
+#: session-owned Counter metrics (the former ad-hoc integer attributes) —
+#: each stays readable as a plain-int session attribute for back compat
+_SESSION_COUNTERS = (
+    ("fused_reduce_calls", "combine steps (incl. fused megakernels)"),
+    ("in_flash_senses", "logical senses (one per pair / NOT)"),
+    ("sense_items", "senses + leaf reads (grouped per plan)"),
+    ("sense_batches", "batched per-die sense kernel dispatches"),
+    ("sense_waves", "topology-schedule waves dispatched"),
+    ("megakernel_calls", "fused sense->reduce(->popcount) passes"),
+    ("tiled_megakernel_splits", "fused chains split for VMEM budget"),
+)
 
 
 class ComputeSession:
@@ -42,7 +56,7 @@ class ComputeSession:
     def __init__(self, device=None, *, backend: "str | Backend" = "pallas",
                  ftl=None, chip=None, config=None, timing=None, energy=None,
                  seed: int = 0, vmem_budget_bytes: "int | None" = None,
-                 encoding: str = tlc.MLC):
+                 encoding: str = tlc.MLC, trace: "bool | Tracer" = False):
         # Deferred imports keep repro.api import-light and cycle-free.
         from repro.flash.device import FlashDevice
         from repro.flash.ftl import FTL
@@ -87,14 +101,26 @@ class ComputeSession:
         self.plans: PlanCache = self.device.plans     # shared per-chip plan cache
         self.ledger = self.device.ledger
         self.executor = Executor(self, vmem_budget_bytes=vmem_budget_bytes)
-        self.fused_reduce_calls = 0    # combine steps (incl. fused megakernels)
-        self.in_flash_senses = 0       # logical senses (one per pair / NOT)
-        self.sense_items = 0           # senses + leaf reads (grouped per plan)
-        self.sense_batches = 0         # batched per-die sense kernel dispatches
-        self.sense_waves = 0           # topology-schedule waves dispatched
-        self.max_concurrent_dies = 0   # widest per-wave die concurrency seen
-        self.megakernel_calls = 0      # fused sense->reduce(->popcount) passes
-        self.tiled_megakernel_splits = 0  # fused chains split for VMEM budget
+        #: typed metrics registry replacing the former ad-hoc integer
+        #: attributes — each is still readable as a plain-int attribute
+        #: (``sess.sense_batches`` etc.) via the properties below
+        self.metrics = MetricsRegistry()
+        for name, desc in _SESSION_COUNTERS:
+            self.metrics.counter(name, desc)
+        self.metrics.gauge("max_concurrent_dies",
+                           "widest per-wave die concurrency seen")
+        self.metrics.histogram("wave_dies", "concurrent dies per wave")
+        self.metrics.histogram("fused_operands", "operands per megakernel")
+        #: device-timeline tracer (``trace=True`` builds one; pass a
+        #: :class:`repro.obs.Tracer` to share/configure it).  Attaches to the
+        #: device ledger, so every command this session triggers — senses,
+        #: programs, realignment copybacks, DMA — lands on its virtual lanes.
+        #: Latest traced session on a shared device wins, consistent with
+        #: set_default_backend above.
+        self.trace: "Tracer | None" = None
+        if trace:
+            self.trace = trace if isinstance(trace, Tracer) else Tracer()
+            self.ledger.tracer = self.trace
         self._tail_masks: Dict[Tuple[int, int], jnp.ndarray] = {}
 
     # -- registration --------------------------------------------------------
@@ -234,6 +260,32 @@ class ComputeSession:
             "arena_shards": self.device.arena.n_shards,
             "ledger": self.ledger.summary(),
         }
+
+    def reset_stats(self, include_ledger: bool = True) -> None:
+        """Zero this session's metrics (and, by default, the shared ledger)
+        so repeated-materialize benchmark loops measure per-iteration counts
+        instead of rebuilding sessions.  Device-shared cache counters
+        (plan/executable hits+misses) are left alone — clear those caches
+        explicitly if a cold-cache measurement is wanted.  An attached
+        tracer keeps its spans (``sess.trace.clear()`` drops them)."""
+        self.metrics.reset()
+        if include_ledger:
+            self.ledger.reset()
+
+
+def _metric_value_property(name: str) -> property:
+    def get(self) -> int:
+        return int(self.metrics[name].value)
+    get.__name__ = name
+    return property(get)
+
+
+# back-compat plain-int views of the registry-backed session counters
+# (``sess.sense_batches`` etc. — the pre-registry attribute surface)
+for _name, _ in _SESSION_COUNTERS:
+    setattr(ComputeSession, _name, _metric_value_property(_name))
+setattr(ComputeSession, "max_concurrent_dies",
+        _metric_value_property("max_concurrent_dies"))
 
 
 # ---------------------------------------------------------------------------

@@ -182,7 +182,8 @@ class FlashDevice:
         self.ledger.add_die_batch(
             per_die,
             n_pages * self.energy.e_prog_uj_kb * self.config.page_kb * len(wls),
-            commands=len(wls), category="program")
+            commands=len(wls), category="program",
+            label=f"program {encoding}x{len(wls)}p")
 
     def program_shared(self, wl: WordlineKey, lsb_bits: jnp.ndarray,
                        msb_bits: jnp.ndarray, retention_hours: float = 0.0,
@@ -337,7 +338,8 @@ class FlashDevice:
         # block erase ~ 3.5 ms, energy ~ 2x page program
         self.ledger.add_die(self.die_of_plane(plane), 3500.0,
                             2 * self.energy.e_prog_uj_kb * self.config.page_kb,
-                            category="erase")
+                            category="erase",
+                            label=f"erase p{plane}b{block}")
 
     def dma_to_controller(self, wl: WordlineKey) -> None:
         """Account a page transfer NAND -> controller on the wordline's channel."""
@@ -351,7 +353,8 @@ class FlashDevice:
         self.ledger.add_channel_batch(self.dma_cost(wls))
 
     def ext_to_host(self, n_bytes: int) -> None:
-        self.ledger.add_host(n_bytes / (self.config.host_bw_gbps * 1e3))
+        self.ledger.add_host(n_bytes / (self.config.host_bw_gbps * 1e3),
+                             label=f"to-host {n_bytes}B")
 
     # -- oracles for verification -------------------------------------------
     def stored_operands(self, wl: WordlineKey) -> Tuple[jnp.ndarray, ...]:

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 from repro.core import tlc
 from repro.core.tlc import PAGES_PER_WL, ROLES_OF
 from repro.flash.device import FlashDevice, WordlineKey
+from repro.obs.trace import traced
 
 
 @dataclasses.dataclass
@@ -67,6 +68,13 @@ class FTL:
         self._group_of: Dict[str, Tuple[str, ...]] = {}
         self._next_die = 0                               # round-robin home die
         self._session = None
+
+    @property
+    def _tracer(self):
+        """Tracer attached to the device ledger (None when tracing is off) —
+        placement work (copyback realignment, NOT-ready derived placements)
+        shows up as 'ftl' wall spans bracketing its device-lane spans."""
+        return self.device.ledger.tracer
 
     @property
     def session(self):
@@ -234,10 +242,12 @@ class FTL:
         self._invalidate(name_a)
         self._invalidate(name_b)
         placement = []
-        for wa, wb in zip(ma.pages, mb.pages):
-            dst = self.allocate_wordline(wa[0])
-            self.device.copyback_align(wa, wb, dst, ma.role, mb.role)
-            placement.append(dst)
+        with traced(self._tracer, "ftl", f"copyback-align[{name_a},{name_b}]",
+                    pages=len(ma.pages)):
+            for wa, wb in zip(ma.pages, mb.pages):
+                dst = self.allocate_wordline(wa[0])
+                self.device.copyback_align(wa, wb, dst, ma.role, mb.role)
+                placement.append(dst)
         self.vectors[name_a] = VectorMeta(name_a, ma.n_bits, placement, "lsb",
                                           die=ma.die)
         self.vectors[name_b] = VectorMeta(name_b, mb.n_bits, placement, "msb",
@@ -260,13 +270,16 @@ class FTL:
         if enc == tlc.MLC and len(names) == 2:
             self.align(names[0], names[1])
             return
-        bits = []
-        for m in metas:
-            packed = self.device.page_read_batch(m.pages, m.role,
-                                                 encoding=enc)
-            bits.append(kops.unpack_bits(packed.reshape(1, -1))[0][: m.n_bits])
-        self.write_group_aligned(list(names), bits, die=metas[0].die,
-                                 encoding=enc)
+        with traced(self._tracer, "ftl",
+                    f"align-group[{','.join(names)}]", encoding=enc):
+            bits = []
+            for m in metas:
+                packed = self.device.page_read_batch(m.pages, m.role,
+                                                     encoding=enc)
+                bits.append(
+                    kops.unpack_bits(packed.reshape(1, -1))[0][: m.n_bits])
+            self.write_group_aligned(list(names), bits, die=metas[0].die,
+                                     encoding=enc)
 
     # -- executor lowering helpers --------------------------------------------
     def group_for_sense(self, names: List[str]) -> Tuple[List[Tuple[str, ...]], "str | None"]:
@@ -347,12 +360,15 @@ class FTL:
             return meta
         copy = self.derived_not_name(name)
         if copy not in self.vectors:
-            packed = self.device.page_read_batch(meta.pages, meta.role,
-                                                 backend=backend)
-            self.device.dma_to_controller_batch(meta.pages)
-            bits = kops.unpack_bits(packed.reshape(1, -1))[0][: meta.n_bits]
-            # the derived placement stays on the source vector's home die
-            self.write_scattered(copy, bits, role="msb", die=meta.die)
+            with traced(self._tracer, "ftl", f"not-ready-copy[{name}]",
+                        pages=len(meta.pages)):
+                packed = self.device.page_read_batch(meta.pages, meta.role,
+                                                     backend=backend)
+                self.device.dma_to_controller_batch(meta.pages)
+                bits = kops.unpack_bits(
+                    packed.reshape(1, -1))[0][: meta.n_bits]
+                # the derived placement stays on the source vector's home die
+                self.write_scattered(copy, bits, role="msb", die=meta.die)
         return self.vectors[copy]
 
     # -- compute (deprecation shims over the session layer) -------------------

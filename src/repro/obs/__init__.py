@@ -1,0 +1,24 @@
+"""repro.obs — observability: device-timeline tracing + typed metrics.
+
+Three dependency-light modules (no jax imports — they sit under every layer
+of the stack without cycles):
+
+- ``trace``   — span-based :class:`Tracer` reconstructing the simulated
+  device timeline (one virtual lane per die / channel / host link, start
+  offsets derived from the ledger's schedule-step model so the longest lane
+  equals ``makespan_us()`` by construction) plus host wall-clock spans, with
+  Chrome trace-event (`chrome://tracing` / Perfetto) JSON export.
+- ``metrics`` — :class:`Counter` / :class:`Gauge` / :class:`Histogram` and
+  the :class:`MetricsRegistry` backing ``ComputeSession`` / cache ``stats()``.
+- ``report``  — human-readable text timeline (per-category, per-lane,
+  per-wave tables).
+
+Turn it on with ``ComputeSession(trace=True)`` and export with
+``session.trace.export("out.json")`` / print ``session.trace.report()``.
+"""
+from repro.obs.metrics import Counter, Gauge, Histogram, Metric, MetricsRegistry
+from repro.obs.report import timeline_report
+from repro.obs.trace import Span, Tracer, traced
+
+__all__ = ["Counter", "Gauge", "Histogram", "Metric", "MetricsRegistry",
+           "Span", "Tracer", "timeline_report", "traced"]
