@@ -36,22 +36,25 @@ def _bench_backends(quick: bool) -> None:
     for backend in (PallasBackend(), SimBackend()):
         for op, kind in (("and", "lsb"), ("or", "msb"), ("xnor", "sbr")):
             plan = plans.get(op, chip)
-            us = timeit(lambda: jax.block_until_ready(backend.sense(vth, plan)))
+            us = timeit(lambda backend=backend, plan=plan: jax.block_until_ready(
+                backend.sense(vth, plan)))
             emit(f"kernel_{backend.name}_sense_{kind}", us,
                  f"megacells_per_s={vth.size / us:.0f};pages={rows}")
-        us = timeit(lambda: jax.block_until_ready(backend.reduce(stack, "and")))
+        us = timeit(lambda backend=backend: jax.block_until_ready(
+            backend.reduce(stack, "and")))
         emit(f"kernel_{backend.name}_reduce8", us,
              f"gbits_per_s={stack.size * 32 / us / 1e3:.1f}")
-        us = timeit(lambda: jax.block_until_ready(backend.popcount(words)))
+        us = timeit(lambda backend=backend: jax.block_until_ready(
+            backend.popcount(words)))
         emit(f"kernel_{backend.name}_popcount", us,
              f"gbits_per_s={words.size * 32 / us / 1e3:.1f}")
         # fused megakernels: 8-operand chain, sense epilogue -> reduce (-> count)
         plan = plans.get("and", chip)
-        us = timeit(lambda: jax.block_until_ready(
+        us = timeit(lambda backend=backend, plan=plan: jax.block_until_ready(
             backend.sense_reduce(vth_chain, plan, op="and")))
         emit(f"kernel_{backend.name}_sense_reduce8", us,
              f"megacells_per_s={vth_chain.size / us:.0f}")
-        us = timeit(lambda: jax.block_until_ready(
+        us = timeit(lambda backend=backend, plan=plan: jax.block_until_ready(
             backend.sense_reduce_popcount(vth_chain, plan, mask, op="and")))
         emit(f"kernel_{backend.name}_sense_reduce_popcount8", us,
              f"megacells_per_s={vth_chain.size / us:.0f}")

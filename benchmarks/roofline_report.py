@@ -27,7 +27,8 @@ NOTES = {
 def load(mesh: str | None = None) -> list[dict]:
     rows = []
     for f in sorted(glob.glob(str(ART / "*.json"))):
-        d = json.load(open(f))
+        with open(f) as fh:
+            d = json.load(fh)
         if mesh and d["mesh"] != mesh:
             continue
         rows.append(d)

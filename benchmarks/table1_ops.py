@@ -42,7 +42,8 @@ def main(quick: bool = True, trace: "str | None" = None) -> None:
         else:
             want = np.asarray(encoding.logical_op(op, lsb, msb))
         errors = int(np.sum(got != want))
-        us = timeit(lambda: jax.block_until_ready(sess.materialize(expr)),
+        us = timeit(lambda expr=expr: jax.block_until_ready(
+                        sess.materialize(expr)),
                     iters=3 if quick else 10)
         plan = sess.plan(op)
         emit(f"table1_{op}", us,
@@ -77,7 +78,8 @@ def main(quick: bool = True, trace: "str | None" = None) -> None:
         errors = int(np.sum(got != want))
         batches0 = tsess.sense_batches
         iters = 3 if quick else 10
-        us = timeit(lambda: jax.block_until_ready(tsess.materialize(expr)),
+        us = timeit(lambda expr=expr: jax.block_until_ready(
+                        tsess.materialize(expr)),
                     iters=iters)
         per_call = (tsess.sense_batches - batches0) / (iters + 1)  # +warmup
         plan = tsess.device.plans.get_encoded(
@@ -88,6 +90,35 @@ def main(quick: bool = True, trace: "str | None" = None) -> None:
              f"plan={plan.describe().replace(',', ';')}")
         assert errors == 0, (op, errors)
         assert per_call == 1, per_call                 # ONE sense group
+
+    # verifier overhead: a fresh session per mode lowers the same mixed DAG
+    # cold, then repeats it.  The verifier's accumulated wall clock (its own
+    # perf counter, so jit-compile noise can't leak in) must stay under 3%
+    # of the cold materialize, and the repeat must memo-hit by signature —
+    # zero additional plans verified.
+    modes = {}
+    for mode in ("off", "on"):
+        vsess = ComputeSession(backend="pallas", seed=0, verify=mode)
+        va, vb = vsess.write_pair("a", lsb, "b", msb)
+        vc, vd = vsess.write_pair("c", lsb, "d", msb)
+        vexpr = (va & vb) ^ (vc | vd)
+        t0v = time.perf_counter()
+        jax.block_until_ready(vsess.materialize(vexpr))
+        cold_us = (time.perf_counter() - t0v) * 1e6
+        jax.block_until_ready(vsess.materialize(vexpr))      # memo-hit path
+        st = vsess.stats()
+        modes[mode] = (cold_us, st["plans_verified"],
+                       st["verify_cache_hits"], st["verify"]["time_us"])
+    cold_us, verified, memo_hits, verify_us = modes["on"]
+    pct = 100.0 * verify_us / max(cold_us, 1e-9)
+    emit("table1_verify_overhead", verify_us,
+         f"pct_of_cold={pct:.3f};cold_us={cold_us:.1f};"
+         f"plans_verified={verified};memo_hits={memo_hits};"
+         f"off_plans_verified={modes['off'][1]}")
+    assert modes["off"][1] == 0 and modes["off"][3] == 0.0, modes["off"]
+    assert verified == 1 and memo_hits >= 1, modes["on"]     # repeat is free
+    assert pct < 3.0, (verify_us, cold_us)
+
     if trace:
         # device-timeline audit: the exported Chrome trace's longest virtual
         # lane must equal the ledger's makespan (by construction — fail loud

@@ -51,7 +51,8 @@ from repro.core.mcflash import ReadPlan
 from repro.kernels.fused import ROW_TILE, TILE_COLS
 from repro.obs.trace import traced
 
-__all__ = ["ExecPlan", "Executor", "Wave", "DEFAULT_VMEM_BUDGET_BYTES"]
+__all__ = ["ExecPlan", "Executor", "ProgramStep", "Wave",
+           "DEFAULT_VMEM_BUDGET_BYTES"]
 
 WordlineKey = Tuple[int, int, int]
 
@@ -88,6 +89,22 @@ class FusedSpec:
     n_operands: int
     n_pages: int
     dies: Tuple[int, ...] = ()    # dies spanned by the operand pages (sorted)
+    #: operands streamed per VMEM-budgeted pass — the declared tile split
+    #: the static verifier audits against the session budget
+    pass_operands: int = 1
+
+
+@dataclasses.dataclass
+class ProgramStep:
+    """A placement write (realignment copyback / NOT-ready program) issued
+    *during lowering*, before any wave dispatches.  Recorded on the plan so
+    the slot-hazard checker can prove every program/scatter is separated
+    from the senses of the same wordlines by a wave barrier: lowering-time
+    programs occupy the implicit pre-dispatch barrier wave ``-1``."""
+    label: str
+    wls: List[WordlineKey]
+    dies: Tuple[int, ...] = ()
+    wave: int = -1                # barrier wave the write completes in
 
 
 @dataclasses.dataclass
@@ -145,16 +162,23 @@ class ExecPlan:
     senses: int                   # logical in-flash senses (paper semantics)
     items: int                    # all sense/read items incl. fused operands
     concurrent_dies: int          # max dies busy in one wave
+    #: lowering-time placement writes (barrier wave -1), for hazard checking
+    programs: List[ProgramStep] = dataclasses.field(default_factory=list)
 
     def signature(self, backend_name: str) -> tuple:
         """Hashable shape of the plan: everything the executable closes over
-        (structure, plans, page counts, die *topology*) minus the runtime
-        inputs (arena shard gathers, mask) — the ExecutableCache key.
+        (structure, plans, page counts, die *topology*, wave layout) minus
+        the runtime inputs (arena shard gathers, mask) — the
+        ExecutableCache key.
 
         Physical die ids are normalized to first-appearance order: the
         executable's wave structure depends only on which units *share* a
         die, so isomorphic layouts (a&b on dies {0,1} vs {0,2}) replay one
-        executable.
+        executable.  The wave layout is part of the signature because the
+        executable iterates it: die normalization alone cannot distinguish
+        two plans whose units overlap dies differently (and therefore
+        scheduled into different waves) once both normalize to the same
+        per-unit die tuples.
         """
         remap: Dict[int, int] = {}
 
@@ -171,6 +195,8 @@ class ExecPlan:
                     norm(st.fused.dies))
                    if st.fused else None)
                   for st in self.steps),
+            tuple((tuple(w.groups), tuple(w.fused), tuple(w.combines))
+                  for w in self.waves),
             self.root, self.out_words,
         )
 
@@ -184,6 +210,7 @@ class _Lowering:
         self.device = session.device
         self.items: List[SenseItem] = []
         self.steps: List[CombineStep] = []
+        self.programs: List[ProgramStep] = []
         self.pages_of: Dict[int, int] = {}    # pid -> page count
         self._next = 0
 
@@ -301,22 +328,33 @@ class _Lowering:
         # pre-lowered — ops consume their leaves directly as pair senses;
         # only a Leaf root becomes a standalone read.
         memo: Dict[Node, int] = {}
-        if isinstance(root, Leaf):
-            return self._finish(self._read_leaf(root.name))
-        stack = [root]
-        while stack:
-            n = stack[-1]
-            if n in memo:
-                stack.pop()
-                continue
-            assert isinstance(n, Op), n
-            pending = [a for a in n.args
-                       if not isinstance(a, Leaf) and a not in memo]
-            if pending:
-                stack.extend(pending)
-                continue
-            stack.pop()
-            memo[n] = self._lower_node(n, memo)
+        # Capture every placement write (realignment copyback, NOT-ready
+        # program) the walk triggers: they land on the plan as barrier-wave
+        # ProgramSteps for the slot-hazard checker.
+        prev_log = getattr(self.device, "program_log", None)
+        self.device.program_log = log = []
+        try:
+            if isinstance(root, Leaf):
+                memo[root] = self._read_leaf(root.name)
+            else:
+                stack = [root]
+                while stack:
+                    n = stack[-1]
+                    if n in memo:
+                        stack.pop()
+                        continue
+                    assert isinstance(n, Op), n
+                    pending = [a for a in n.args
+                               if not isinstance(a, Leaf) and a not in memo]
+                    if pending:
+                        stack.extend(pending)
+                        continue
+                    stack.pop()
+                    memo[n] = self._lower_node(n, memo)
+        finally:
+            self.device.program_log = prev_log
+        self.programs = [ProgramStep(label, list(wls), self._dies_of(wls))
+                         for label, wls in log]
         return self._finish(memo[root])
 
     def _finish(self, root_pid: int) -> ExecPlan:
@@ -332,7 +370,7 @@ class _Lowering:
                         out_words=self.pages_of[root_pid]
                         * (self.ftl.cfg.page_bits // 32),
                         senses=senses, items=len(self.items) + fused_ops,
-                        concurrent_dies=concurrent)
+                        concurrent_dies=concurrent, programs=self.programs)
 
     def _fuse(self, root: int) -> None:
         """Fold combines over single-use, same-plan senses into megakernels.
@@ -364,7 +402,10 @@ class _Lowering:
             st.fused = FusedSpec(plan=its[0].plan, op_label=its[0].op_label,
                                  wls=[wl for it in its for wl in it.wls],
                                  n_operands=len(its), n_pages=n_pages,
-                                 dies=dies)
+                                 dies=dies,
+                                 pass_operands=min(
+                                     len(its),
+                                     self.session.executor.max_fused_operands))
             consumed.update(it.pid for it in its)
         if consumed:
             self.items = [it for it in self.items if it.pid not in consumed]
@@ -464,6 +505,15 @@ class Executor:
     def stats(self) -> dict:
         return {**self.cache.stats(), "traces": self.traces}
 
+    def lower(self, node: Node) -> ExecPlan:
+        """Lower a canonical DAG to its static plan WITHOUT dispatching —
+        the plan still passes through the session's verifier, so this is
+        the entry point for plan-corpus verification."""
+        plan = _Lowering(self.session).lower(node)
+        self.session.verify_lowered_plan(
+            plan, plan.signature(self.session.backend.name))
+        return plan
+
     def _fused_chunks(self, n_operands: int) -> int:
         """Tiled passes a fused spec needs under the VMEM budget."""
         return -(-n_operands // self.max_fused_operands)
@@ -476,12 +526,15 @@ class Executor:
         # FTL's realignment copybacks inside it also land as device spans
         with traced(tracer, "lower", "lower"):
             plan = _Lowering(sess).lower(node)
+        # static verification runs at lowering time, before any accounting
+        # or dispatch; memoized per signature so cache-hit plans pay ~nothing
+        sig = plan.signature(sess.backend.name)
+        sess.verify_lowered_plan(plan, sig)
         self._account(plan)
         # the cache is per-device (one chip), and signature() leads with the
         # backend name — only interpret mode and the tiling width need adding
         key = (getattr(sess.backend, "interpret", None),
-               self.max_fused_operands,
-               plan.signature(sess.backend.name), popcount)
+               self.max_fused_operands, sig, popcount)
         if tracer is not None:
             hit = key in self.cache
             tracer.instant("cache", "executable-hit" if hit

@@ -69,12 +69,19 @@ class PlanCache:
         one cached executable."""
         from repro.core import tlc  # deferred: core.tlc layers below api
 
+        if encoding not in tlc.ENCODINGS:
+            raise ValueError(f"unknown encoding {encoding!r}; "
+                             f"pick one of {tlc.ENCODINGS}")
         roles = tuple(sorted(roles))
         key = (encoding, op, roles, chip)
         plan = self._plans.get(key)
         if plan is None:
             plan = self._plans[key] = tlc.plan_encoded(op, tuple(roles), chip,
                                                        encoding)
+            # the op label must name its encoding: plan/executable cache
+            # keys and the executor's plan signatures all embed it (the
+            # encoding-consistency invariant audits exactly this)
+            assert plan.op.startswith(f"{encoding}:"), plan.op
             self._misses.add()
             self._miss_counts[key] = self._miss_counts.get(key, 0) + 1
         else:

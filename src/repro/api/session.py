@@ -18,13 +18,14 @@ kernels) and bit-exact against each other.
 """
 from __future__ import annotations
 
+import os
 from typing import Dict, Iterable, List, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.api.backends import Backend, get_backend
-from repro.api.executor import Executor
+from repro.api.executor import OPERAND_TILE_BYTES, ExecPlan, Executor
 from repro.api.graph import ASSOCIATIVE, BitVector, Leaf, simplify
 from repro.api.plan_cache import PlanCache
 from repro.core import encoding, tlc
@@ -34,6 +35,7 @@ from repro.core.vth_model import ChipModel
 from repro.kernels import ops as kops
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import Tracer
+from repro.verify import PlanContext, PlanVerifier
 
 __all__ = ["ComputeSession", "run_op"]
 
@@ -56,7 +58,8 @@ class ComputeSession:
     def __init__(self, device=None, *, backend: "str | Backend" = "pallas",
                  ftl=None, chip=None, config=None, timing=None, energy=None,
                  seed: int = 0, vmem_budget_bytes: "int | None" = None,
-                 encoding: str = tlc.MLC, trace: "bool | Tracer" = False):
+                 encoding: str = tlc.MLC, trace: "bool | Tracer" = False,
+                 verify: "str | None" = None):
         # Deferred imports keep repro.api import-light and cycle-free.
         from repro.flash.device import FlashDevice
         from repro.flash.ftl import FTL
@@ -101,6 +104,13 @@ class ComputeSession:
         self.plans: PlanCache = self.device.plans     # shared per-chip plan cache
         self.ledger = self.device.ledger
         self.executor = Executor(self, vmem_budget_bytes=vmem_budget_bytes)
+        #: static ExecPlan verifier (``"off"`` | ``"on"`` | ``"paranoid"``),
+        #: run at lowering time and memoized by plan signature; default from
+        #: ``$REPRO_VERIFY`` (falling back to ``"on"`` — lowering is host-side
+        #: and the check is amortized to ~zero by the signature memo)
+        self.verifier = PlanVerifier(
+            verify if verify is not None
+            else os.environ.get("REPRO_VERIFY", "on"))
         #: typed metrics registry replacing the former ad-hoc integer
         #: attributes — each is still readable as a plain-int attribute
         #: (``sess.sense_batches`` etc.) via the properties below
@@ -197,6 +207,29 @@ class ComputeSession:
         return [self.plan(op).describe() for op in ops]
 
     # -- execution -----------------------------------------------------------
+    def plan_context(self) -> PlanContext:
+        """Device/session geometry the static plan verifier checks against."""
+        return PlanContext(
+            die_of_plane=self.device.die_of_plane,
+            page_words=self.ftl.cfg.page_bits // 32,
+            vmem_budget_bytes=self.executor.vmem_budget_bytes,
+            max_fused_operands=self.executor.max_fused_operands,
+            operand_tile_bytes=OPERAND_TILE_BYTES)
+
+    def verify_lowered_plan(self, plan: ExecPlan,
+                            signature: "tuple | None" = None) -> None:
+        """Hook the executor calls on every freshly lowered plan; raises
+        :class:`repro.verify.PlanInvariantError` before any dispatch when a
+        schedule invariant is violated.  No-op with ``verify="off"``."""
+        if self.verifier.enabled:
+            self.verifier.verify(plan, self.plan_context(), signature)
+
+    def lower(self, expr: BitVector) -> ExecPlan:
+        """Canonicalize + lower ``expr`` to its static :class:`ExecPlan`
+        without dispatching (the plan is still verified) — the entry point
+        for plan-corpus checks and schedule inspection."""
+        return self.executor.lower(simplify(expr.node))
+
     def materialize(self, expr: BitVector, *, unpacked: bool = False,
                     to_host: bool = True) -> jnp.ndarray:
         """Compile + execute the expression DAG; returns the result vector.
@@ -257,6 +290,10 @@ class ComputeSession:
             "max_concurrent_dies": self.max_concurrent_dies,
             "megakernel_calls": self.megakernel_calls,
             "tiled_megakernel_splits": self.tiled_megakernel_splits,
+            "plans_verified": self.verifier.plans_verified,
+            "verify_cache_hits": self.verifier.cache_hits,
+            "verify": {"mode": self.verifier.mode,
+                       "time_us": self.verifier.time_us},
             "arena_shards": self.device.arena.n_shards,
             "ledger": self.ledger.summary(),
         }
@@ -269,6 +306,7 @@ class ComputeSession:
         explicitly if a cold-cache measurement is wanted.  An attached
         tracer keeps its spans (``sess.trace.clear()`` drops them)."""
         self.metrics.reset()
+        self.verifier.reset()
         if include_ledger:
             self.ledger.reset()
 

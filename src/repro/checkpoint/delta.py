@@ -15,7 +15,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops as kops
+from repro.api.backends import get_backend
+
+# deltas run through the backend protocol (the same packed-XOR kernel the
+# executor dispatches), not a direct kernel call — see repro.verify.lint
+_BACKEND = get_backend("pallas")
 
 
 def _to_words(x: np.ndarray) -> np.ndarray:
@@ -40,7 +44,7 @@ def _xor_words(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     bp = np.concatenate([b, np.zeros(pad, np.uint32)])
     stack = jnp.stack([jnp.asarray(ap.reshape(rows, cols)),
                        jnp.asarray(bp.reshape(rows, cols))])
-    out = kops.bitwise_reduce(stack, op="xor")
+    out = _BACKEND.reduce(stack, "xor")
     return np.asarray(out).reshape(-1)[:n]
 
 

@@ -229,6 +229,9 @@ def pattern_plan(op_label: str, pattern: Tuple[int, ...], chip: TLCChipModel,
         # hand-built plan shouldn't crash): one reference above the window
         # puts every cell in band 0.
         refs = (chip.prog_hi[-1] + 1.0,)
+    # strictly monotone valley order is the contract the kernels' phase
+    # sequencing and the ref-bounds plan invariant both rest on
+    assert all(a < b for a, b in zip(refs, refs[1:])), refs
     return ReadPlan(op_label, "parity", refs, len(refs),
                     uses_inverse=(pattern[0] == 0))
 

@@ -84,6 +84,10 @@ class FlashDevice:
         self._default_backend = PallasBackend()
         self._key = jax.random.PRNGKey(seed)
         self.ftl = None                # first-bound FTL registers itself here
+        #: when set (by the executor's lowering pass) every shared-page
+        #: program appends ``(label, wls)`` here, so placement writes show
+        #: up on the lowered plan for static hazard checking
+        self.program_log: "list | None" = None
 
     def set_default_backend(self, backend) -> None:
         """Backend used when a command doesn't pass one explicitly (sessions
@@ -184,6 +188,9 @@ class FlashDevice:
             n_pages * self.energy.e_prog_uj_kb * self.config.page_kb * len(wls),
             commands=len(wls), category="program",
             label=f"program {encoding}x{len(wls)}p")
+        if self.program_log is not None:
+            self.program_log.append((f"program {encoding}x{len(wls)}p",
+                                     list(wls)))
 
     def program_shared(self, wl: WordlineKey, lsb_bits: jnp.ndarray,
                        msb_bits: jnp.ndarray, retention_hours: float = 0.0,

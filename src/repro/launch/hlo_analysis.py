@@ -193,15 +193,16 @@ class CostWalker:
     def _operand_shapes(self, instr: Instr, table: dict[str, str]) -> list[str]:
         # operand names appear before attribute text; attributes also contain
         # %names (calls= etc.) — restrict to the parenthesised operand list.
-        depth, i = 1, 0
+        depth, end = 1, max(len(instr.rest) - 1, 0)
         for i, ch in enumerate(instr.rest):
             if ch == "(":
                 depth += 1
             elif ch == ")":
                 depth -= 1
                 if depth == 0:
+                    end = i
                     break
-        oper_text = instr.rest[:i]
+        oper_text = instr.rest[:end]
         return [table[n] for n in _OPERAND_RE.findall(oper_text) if n in table]
 
     def comp_cost(self, name: str, top_level: bool) -> Cost:

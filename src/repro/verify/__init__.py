@@ -1,0 +1,39 @@
+"""Static verification for the MCFlash reproduction.
+
+Two halves, both pure Python and dependency-light:
+
+- :mod:`repro.verify.invariants` / :mod:`repro.verify.plan_check` — a static
+  :class:`~repro.api.executor.ExecPlan` verifier that runs at lowering time,
+  before any dispatch: wave die-disjointness, schedule topology, arena-slot
+  program/sense hazards, VMEM-budget compliance of fused tile splits,
+  encoding consistency, reference-stack bounds, and ledger byte conservation.
+  Violations raise a typed :class:`PlanInvariantError` carrying the offending
+  wave/unit and a rendered plan excerpt.  Sessions enable it with
+  ``ComputeSession(verify="on" | "paranoid")``; results memoize per plan
+  signature so cache-hit materializes pay nothing.
+- :mod:`repro.verify.lint` — an AST-based repo-invariant linter
+  (``python -m repro.verify.lint src/``) enforcing layering rules the type
+  system can't: kernel calls stay in ``kernels/`` + ``backends.py``, no
+  host syncs on executor/kernel hot paths, no ledger-bypassing transfers,
+  no bare (cache-bypassing) plan compilation.
+
+:mod:`repro.verify.corpus` replays the quick-benchmark plan corpus through
+the verifier in paranoid mode — the CI gate that every plan the benchmarks
+lower verifies clean.
+"""
+from repro.verify.invariants import (
+    INVARIANTS,
+    PlanContext,
+    PlanInvariantError,
+    render_plan,
+)
+from repro.verify.plan_check import PlanVerifier, check_plan
+
+__all__ = [
+    "INVARIANTS",
+    "PlanContext",
+    "PlanInvariantError",
+    "PlanVerifier",
+    "check_plan",
+    "render_plan",
+]

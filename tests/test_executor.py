@@ -112,7 +112,7 @@ def test_repeated_materialize_hits_cached_executable(rng):
     c, d = sess.write_pair("c", bits[2], "d", bits[3])
     expr = (a & b) ^ (c & d)
     want = (bits[0] & bits[1]) ^ (bits[2] & bits[3])
-    for i in range(3):
+    for _ in range(3):
         got = np.asarray(sess.materialize(expr, unpacked=True))
         np.testing.assert_array_equal(got, want)
     stats = sess.executor.stats()
@@ -422,11 +422,11 @@ def test_vmem_budget_splits_oversized_megakernel(rng):
         np.testing.assert_array_equal(got, want)
         if budget is None:
             assert sess.tiled_megakernel_splits == 0
-            assert sess.megakernel_calls == 1
+            assert sess.megakernel_calls == min_calls
         else:
             assert sess.executor.max_fused_operands == 3
             assert sess.tiled_megakernel_splits == 1
-            assert sess.megakernel_calls == 2              # ceil(4 ops / 3)
+            assert sess.megakernel_calls == min_calls      # ceil(4 ops / 3)
         # popcount stays exact through the split path too
         assert sess.popcount(expr) == int(np.sum(want))
 

@@ -132,7 +132,8 @@ def test_session_stats_keys_unchanged_and_attr_reads():
                       "in_flash_senses", "sense_items", "sense_batches",
                       "sense_waves", "max_concurrent_dies",
                       "megakernel_calls", "tiled_megakernel_splits",
-                      "arena_shards", "ledger"}
+                      "arena_shards", "ledger",
+                      "plans_verified", "verify_cache_hits", "verify"}
     # pre-registry attribute reads still work and are plain ints
     for name in ("fused_reduce_calls", "in_flash_senses", "sense_items",
                  "sense_batches", "sense_waves", "megakernel_calls",
@@ -152,7 +153,7 @@ def test_cache_stats_shapes_unchanged():
     assert plans.stats() == {"hits": 1, "misses": 1, "entries": 1}
     cache = ExecutableCache(capacity=2)
     for k in ("a", "b", "c"):
-        cache.get(k, lambda: k)
+        cache.get(k, lambda k=k: k)
     cache.get("c", lambda: "c")
     assert cache.stats() == {"hits": 1, "misses": 3, "entries": 2,
                              "evictions": 1, "capacity": 2}
@@ -199,7 +200,8 @@ def test_chrome_export_schema_and_lane_invariants(tmp_path):
     # the CI gate's checker: schema + per-lane non-overlap + makespan match
     stats = check_trace(path)
     assert stats["spans"] > 0 and stats["lanes"] >= 2
-    doc = json.loads(open(path).read())
+    with open(path) as f:
+        doc = json.load(f)
     events = doc["traceEvents"]
     metas = [e for e in events if e["ph"] == "M"]
     assert {"device (virtual us)", "host (wall clock)"} <= {
