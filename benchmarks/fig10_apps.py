@@ -32,7 +32,8 @@ PAPER = {
 }
 
 
-def main(quick: bool = True, trace: "str | None" = None) -> None:
+def main(quick: bool = True, trace: "str | None" = None,
+         faults: "str | None" = None) -> None:
     sweeps = {
         "image_segmentation": [image_segmentation(n)
                                for n in (10_000, 50_000, 100_000, 200_000)],
@@ -44,7 +45,8 @@ def main(quick: bool = True, trace: "str | None" = None) -> None:
     cfg = SSDConfig(page_kb=2) if quick else SSDConfig()
     sess = None
     for name, wls in sweeps.items():
-        sess = ComputeSession(config=cfg, backend="pallas", trace=bool(trace))
+        sess = ComputeSession(config=cfg, backend="pallas", trace=bool(trace),
+                              faults=faults)
         functional = wls[0].run_functional(session=sess)
         senses = functional["stats"]["in_flash_senses"]
         measured = functional["measured"]
@@ -68,6 +70,12 @@ def main(quick: bool = True, trace: "str | None" = None) -> None:
         assert measured["die_parallel_us"] <= measured["serial_us"]
         if wls[0].k_operands > 2:      # multi-pair chains span multiple dies
             assert functional["stats"]["max_concurrent_dies"] > 1
+        if faults is not None:
+            rel = sess.stats()["reliability"]
+            emit(f"fig10_{name}_reliability",
+                 sess.ledger.category_us.get("recovery", 0.0),
+                 f"spec={faults};mismatches={rel['mismatches']};"
+                 f"retries={rel['retries']};recals={rel['recalibrations']}")
     if trace and sess is not None:
         # export the last workload's device timeline (bitmap index — the
         # longest chain, so the most interesting die-parallel pattern)
@@ -84,4 +92,10 @@ if __name__ == "__main__":
                     default=None, metavar="OUT_JSON",
                     help="export the Chrome trace of the last functional "
                          "workload run")
-    main(trace=ap.parse_args().trace)
+    ap.add_argument("--faults", nargs="?", const="pe=5000", default=None,
+                    metavar="SPEC",
+                    help="inject seeded wear (e.g. pe=5000,seed=3); the "
+                         "functional runs must stay bit-exact through the "
+                         "recovery ladder")
+    args = ap.parse_args()
+    main(trace=args.trace, faults=args.faults)

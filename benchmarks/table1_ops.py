@@ -18,9 +18,11 @@ from repro.api import ComputeSession
 from repro.core import encoding
 
 
-def main(quick: bool = True, trace: "str | None" = None) -> None:
+def main(quick: bool = True, trace: "str | None" = None,
+         faults: "str | None" = None) -> None:
     t0 = time.perf_counter()
-    sess = ComputeSession(backend="pallas", seed=0, trace=bool(trace))
+    sess = ComputeSession(backend="pallas", seed=0, trace=bool(trace),
+                          faults=faults)
     pages = 2 if quick else 8
     n = pages * sess.device.config.page_bits
     rng = np.random.default_rng(0)
@@ -59,7 +61,9 @@ def main(quick: bool = True, trace: "str | None" = None) -> None:
          f"hits={ex['hits']};misses={ex['misses']};traces={ex['traces']};"
          f"evictions={ex['evictions']}")
     # repeat timings replayed cached executables: one trace per DAG shape
-    assert ex["traces"] == ex["misses"], ex
+    # (recovery re-senses compile extra shifted plans, so only assert clean)
+    if faults is None:
+        assert ex["traces"] == ex["misses"], ex
     led = sess.ledger
     emit("table1_die_parallel", led.die_step_us,
          f"serial_us={led.serial_us():.1f};"
@@ -69,7 +73,8 @@ def main(quick: bool = True, trace: "str | None" = None) -> None:
 
     # TLC 3-operand fast paths (§7): a&b&c / a|b|c over one co-located
     # wordline triple are ONE sense group each (AND3 = 1 phase, OR3 = 2)
-    tsess = ComputeSession(backend="pallas", seed=0, encoding="tlc")
+    tsess = ComputeSession(backend="pallas", seed=0, encoding="tlc",
+                           faults=faults)
     csb = (rng.random(n) < 0.5).astype(np.uint8)
     ta, tb, tc = tsess.write_triple("a", lsb, "b", msb, "c", csb)
     for op, expr, want in (("and3", ta & tb & tc, lsb & msb & csb),
@@ -89,9 +94,24 @@ def main(quick: bool = True, trace: "str | None" = None) -> None:
              f"sense_groups_per_call={per_call:g};"
              f"plan={plan.describe().replace(',', ';')}")
         assert errors == 0, (op, errors)
-        assert per_call == 1, per_call                 # ONE sense group
+        if faults is None:       # retries legitimately add sense groups
+            assert per_call == 1, per_call             # ONE sense group
 
-    # verifier overhead: a fresh session per mode lowers the same mixed DAG
+    if faults is not None:
+        # --faults: bit-exactness above already held THROUGH the recovery
+        # ladder; surface what it cost
+        for label, s in (("mlc", sess), ("tlc", tsess)):
+            rel = s.stats()["reliability"]
+            if rel is None:
+                continue
+            emit(f"table1_reliability_{label}",
+                 s.ledger.category_us.get("recovery", 0.0),
+                 f"spec={faults};mismatches={rel['mismatches']};"
+                 f"retries={rel['retries']};recals={rel['recalibrations']};"
+                 f"migrations={rel['migrations']}")
+
+    # verifier overhead: a fresh session per mode (always fault-free — the
+    # <3% budget measures the verifier alone) lowers the same mixed DAG
     # cold, then repeats it.  The verifier's accumulated wall clock (its own
     # perf counter, so jit-compile noise can't leak in) must stay under 3%
     # of the cold materialize, and the repeat must memo-hit by signature —
@@ -145,5 +165,10 @@ if __name__ == "__main__":
                     default=None, metavar="OUT_JSON",
                     help="export the device-timeline Chrome trace "
                          "(open in chrome://tracing or ui.perfetto.dev)")
+    ap.add_argument("--faults", nargs="?", const="pe=5000", default=None,
+                    metavar="SPEC",
+                    help="inject seeded wear (e.g. pe=5000,seed=3) and run "
+                         "every bit-exactness check through the recovery "
+                         "ladder")
     args = ap.parse_args()
-    main(quick=args.quick, trace=args.trace)
+    main(quick=args.quick, trace=args.trace, faults=args.faults)

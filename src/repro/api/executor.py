@@ -52,7 +52,7 @@ from repro.kernels.fused import ROW_TILE, TILE_COLS
 from repro.obs.trace import traced
 
 __all__ = ["ExecPlan", "Executor", "ProgramStep", "Wave",
-           "DEFAULT_VMEM_BUDGET_BYTES"]
+           "DEFAULT_VMEM_BUDGET_BYTES", "schedule_programs_into_idle_waves"]
 
 WordlineKey = Tuple[int, int, int]
 
@@ -199,6 +199,41 @@ class ExecPlan:
                   for w in self.waves),
             self.root, self.out_words,
         )
+
+
+def schedule_programs_into_idle_waves(plan: ExecPlan,
+                                      steps: List[ProgramStep]) -> None:
+    """Slot migration copyback programs into the plan's wave timeline.
+
+    Each step is assigned the earliest wave whose busy dies (sense groups +
+    fused megakernels dispatched that wave, plus programs already slotted
+    there) are disjoint from the step's own dies — the "idle die slot" the
+    reliability layer fills while other dies sense.  A step no wave can host
+    falls back to the pre-dispatch barrier wave ``-1`` (it serializes before
+    wave 0 instead of overlapping).  Steps are appended to ``plan.programs``
+    so the ``migration-barrier`` invariant can audit the placement.
+    """
+    busy: List[set] = []
+    for w in plan.waves:
+        dies: set = set()
+        for gi in w.groups:
+            dies.update(plan.groups[gi].dies)
+        for si in w.fused:
+            fused = plan.steps[si].fused
+            if fused is not None:
+                dies.update(fused.dies)
+        busy.append(dies)
+    for pr in plan.programs:
+        if 0 <= pr.wave < len(busy):
+            busy[pr.wave].update(pr.dies)
+    for st in steps:
+        st.wave = -1
+        for wi, dies in enumerate(busy):
+            if not dies.intersection(st.dies):
+                st.wave = wi
+                dies.update(st.dies)
+                break
+        plan.programs.append(st)
 
 
 class _Lowering:

@@ -91,14 +91,17 @@ class Ledger:
         self.add_channel_batch({ch: us}, label=label)
 
     def add_channel_batch(self, per_channel_us: Mapping[int, float],
-                          label: "str | None" = None) -> None:
+                          label: "str | None" = None,
+                          category: str = "dma") -> None:
         """Batched NAND->controller transfer accounting, one parallel step per
-        call (channels named together stream concurrently)."""
+        call (channels named together stream concurrently).  ``category``
+        lets recovery re-senses book their transfers separately from the
+        primary wave's DMA."""
         total = 0.0
         for ch, us in per_channel_us.items():
             self.channel_busy_us[ch] = self.channel_busy_us.get(ch, 0.0) + us
             total += us
-        self.category_us["dma"] = self.category_us.get("dma", 0.0) + total
+        self.category_us[category] = self.category_us.get(category, 0.0) + total
         if per_channel_us:
             if self.tracer is not None:
                 self.tracer.channel_step(self.channel_step_us, per_channel_us,

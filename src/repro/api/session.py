@@ -18,6 +18,7 @@ kernels) and bit-exact against each other.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 from typing import Dict, Iterable, List, Tuple
 
@@ -35,6 +36,7 @@ from repro.core.vth_model import ChipModel
 from repro.kernels import ops as kops
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import Tracer
+from repro.reliability import FaultConfig, FaultModel
 from repro.verify import PlanContext, PlanVerifier
 
 __all__ = ["ComputeSession", "run_op"]
@@ -59,7 +61,7 @@ class ComputeSession:
                  ftl=None, chip=None, config=None, timing=None, energy=None,
                  seed: int = 0, vmem_budget_bytes: "int | None" = None,
                  encoding: str = tlc.MLC, trace: "bool | Tracer" = False,
-                 verify: "str | None" = None):
+                 verify: "str | None" = None, faults=None, recovery=None):
         # Deferred imports keep repro.api import-light and cycle-free.
         from repro.flash.device import FlashDevice
         from repro.flash.ftl import FTL
@@ -132,6 +134,26 @@ class ComputeSession:
             self.trace = trace if isinstance(trace, Tracer) else Tracer()
             self.ledger.tracer = self.trace
         self._tail_masks: Dict[Tuple[int, int], jnp.ndarray] = {}
+        #: wear/retention fault injection + recovery (reliability layer):
+        #: ``faults=`` (or ``$REPRO_FAULTS``) installs the seeded
+        #: :class:`FaultModel` on the device — any spec
+        #: :meth:`FaultConfig.parse` accepts.  ``recovery=`` controls the
+        #: :class:`~repro.reliability.recovery.ReliabilityManager`:
+        #: ``None`` auto-enables it when faults are installed (on this
+        #: session or a sibling sharing the device), ``"off"`` disables
+        #: detection/recovery even under injected faults (the
+        #: negative-control mode), and a dict / :class:`RetryPolicy` /
+        #: ``True`` enables it with that policy regardless of faults.
+        fault_cfg = FaultConfig.parse(
+            faults if faults is not None else os.environ.get("REPRO_FAULTS"))
+        if fault_cfg is not None:
+            self.device.faults = FaultModel(fault_cfg)
+        self.reliability = None
+        if recovery != "off" and (recovery is not None
+                                  or self.device.faults is not None):
+            from repro.reliability.recovery import ReliabilityManager
+            self.reliability = ReliabilityManager(
+                self, None if recovery in (None, True, "on") else recovery)
 
     # -- registration --------------------------------------------------------
     def write(self, name: str, bits: jnp.ndarray, role: str = "lsb",
@@ -241,6 +263,9 @@ class ComputeSession:
         """
         node = simplify(expr.node)
         packed = self.executor.run(node, expr.n_bits)
+        if self.reliability is not None:
+            packed = self.reliability.verify_and_recover(node, expr.n_bits,
+                                                         packed)
         if to_host:
             self.device.ext_to_host(int(packed.shape[-1]) * 4)
         if unpacked:
@@ -270,7 +295,15 @@ class ComputeSession:
         4-byte count crosses to the host (``to_host`` accounts exactly
         that — not a page transfer)."""
         node = simplify(expr.node)
-        count = self.executor.run_popcount(node, expr.n_bits)
+        if self.reliability is not None:
+            # words must exist to checkword-verify; the count then folds
+            # host-side (the fused on-device popcount would hide bit errors)
+            packed = self.executor.run(node, expr.n_bits)
+            packed = self.reliability.verify_and_recover(node, expr.n_bits,
+                                                         packed)
+            count = self.backend.popcount(packed.reshape(1, -1))[0]
+        else:
+            count = self.executor.run_popcount(node, expr.n_bits)
         if to_host:
             self.device.ext_to_host(4)
         return int(count)
@@ -296,6 +329,10 @@ class ComputeSession:
                        "time_us": self.verifier.time_us},
             "arena_shards": self.device.arena.n_shards,
             "ledger": self.ledger.summary(),
+            "faults": (dataclasses.asdict(self.device.faults.cfg)
+                       if self.device.faults is not None else None),
+            "reliability": (self.reliability.stats()
+                            if self.reliability is not None else None),
         }
 
     def reset_stats(self, include_ledger: bool = True) -> None:
@@ -307,6 +344,8 @@ class ComputeSession:
         tracer keeps its spans (``sess.trace.clear()`` drops them)."""
         self.metrics.reset()
         self.verifier.reset()
+        if self.reliability is not None:
+            self.reliability.reset()
         if include_ledger:
             self.ledger.reset()
 

@@ -42,11 +42,28 @@ def _moving_ref(plan: ReadPlan) -> int:
     return {"lsb": 0, "msb": 0, "sbr": 2}[plan.kind]
 
 
+def shift_plan(plan: ReadPlan, offset_v: float,
+               ref_idx: int | None = None) -> ReadPlan:
+    """Return ``plan`` with reference(s) shifted by ``offset_v`` volts.
+
+    With ``ref_idx=None`` every reference shifts together (common-mode) —
+    the read-retry ladder's move against uniform wear drift, valid for any
+    kind including multi-valley parity stacks since a uniform shift
+    preserves reference monotonicity.  With an index, only that reference
+    moves (the classic single-valley calibration sweep).
+    """
+    if ref_idx is None:
+        refs = tuple(r + offset_v for r in plan.refs)
+    else:
+        refs = list(plan.refs)
+        refs[ref_idx] = refs[ref_idx] + offset_v
+        refs = tuple(refs)
+    return ReadPlan(plan.op, plan.kind, refs,
+                    plan.sensing_phases, plan.uses_inverse)
+
+
 def _rber_at(plan: ReadPlan, ref_idx: int, offset: float, vth, want) -> float:
-    refs = list(plan.refs)
-    refs[ref_idx] = refs[ref_idx] + offset
-    shifted = ReadPlan(plan.op, plan.kind, tuple(refs),
-                       plan.sensing_phases, plan.uses_inverse)
+    shifted = shift_plan(plan, offset, ref_idx)
     got = mcflash.execute_plan(shifted, vth)
     return 100.0 * float(jnp.mean((got != want).astype(jnp.float32)))
 

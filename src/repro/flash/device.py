@@ -84,6 +84,10 @@ class FlashDevice:
         self._default_backend = PallasBackend()
         self._key = jax.random.PRNGKey(seed)
         self.ftl = None                # first-bound FTL registers itself here
+        #: optional :class:`repro.reliability.FaultModel` — when installed
+        #: (``ComputeSession(faults=...)`` / ``REPRO_FAULTS``) every program
+        #: perturbs its Vth rows per the seeded wear model
+        self.faults = None
         #: when set (by the executor's lowering pass) every shared-page
         #: program appends ``(label, wls)`` here, so placement writes show
         #: up on the lowered plan for static hazard checking
@@ -161,6 +165,9 @@ class FlashDevice:
                 states = tlc.encode_states(encoding, pages)
                 vth = tlc.program_tlc(self._next_key(), states, self.tlc_chip,
                                       n_pe=float(n_pe))
+            if self.faults is not None:
+                vth = self.faults.perturb(vth, plane=plane, block=block,
+                                          wl=wl[2], n_pe=n_pe)
             vths.append(vth)
             self._operands[wl] = tuple(p.astype(jnp.uint8) for p in pages)
             self._encoding_of[wl] = encoding
@@ -362,6 +369,17 @@ class FlashDevice:
     def ext_to_host(self, n_bytes: int) -> None:
         self.ledger.add_host(n_bytes / (self.config.host_bw_gbps * 1e3),
                              label=f"to-host {n_bytes}B")
+
+    def age(self, hours: float) -> None:
+        """Advance simulated retention time: every already-programmed arena
+        row drifts down by the fault model's uniform retention term (future
+        programs age from the new baseline).  No-op without a fault model."""
+        if self.faults is None or hours <= 0:
+            return
+        delta = self.faults.age_delta(hours)
+        refs = list(self._slot_of.values())
+        if refs and delta != 0.0:
+            self.arena.write(refs, self.arena.gather(refs) + delta)
 
     # -- oracles for verification -------------------------------------------
     def stored_operands(self, wl: WordlineKey) -> Tuple[jnp.ndarray, ...]:

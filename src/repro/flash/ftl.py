@@ -29,14 +29,17 @@ keep working while new code talks to the session layer directly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import tlc
+from repro.core.rber import WearTracker
 from repro.core.tlc import PAGES_PER_WL, ROLES_OF
 from repro.flash.device import FlashDevice, WordlineKey
 from repro.obs.trace import traced
+from repro.reliability import checkwords
 
 
 @dataclasses.dataclass
@@ -52,6 +55,9 @@ class VectorMeta:
     die: int = 0
     #: row encoding the vector was programmed under (mlc | tlc | reduced-mlc)
     encoding: str = tlc.MLC
+    #: sampled-parity checkword (reliability layer): the vector's bit values
+    #: at the shared deterministic sample positions, recorded at write time
+    check: Optional[np.ndarray] = None
 
 
 class FTL:
@@ -61,7 +67,9 @@ class FTL:
             device.ftl = self          # first FTL owns the device's allocator
         self.cfg = device.config
         self._next_wl: Dict[int, Tuple[int, int]] = {}   # plane -> (block, wl)
-        self._wear: Dict[Tuple[int, int], int] = {}
+        #: per-block P/E + observed-RBER health (reliability layer); retired
+        #: blocks are skipped by the allocator
+        self.wear = WearTracker()
         self.vectors: Dict[str, VectorMeta] = {}
         #: name -> ordered tuple of ALL names co-located on its wordlines
         #: (pairs under MLC/reduced-MLC, up to triples under TLC)
@@ -87,12 +95,24 @@ class FTL:
     # -- allocation ----------------------------------------------------------
     def allocate_wordline(self, plane: int) -> WordlineKey:
         block, wl = self._next_wl.get(plane, (0, 0))
+        while self.wear.is_retired((plane, block)):      # skip retired blocks
+            block, wl = block + 1, 0
         key = (plane, block, wl)
         wl += 1
         if wl >= self.cfg.pages_per_block // 2:          # wordlines per block
             block, wl = block + 1, 0
         self._next_wl[plane] = (block, wl)
         return key
+
+    def vectors_in_block(self, plane: int, block: int) -> List[str]:
+        """Registered vectors with at least one page in (plane, block)."""
+        return [m.name for m in self.vectors.values()
+                if any(p == plane and b == block for p, b, _ in m.pages)]
+
+    def retire_block(self, plane: int, block: int) -> None:
+        """Mark a block bad: the allocator skips it from now on (resident
+        data stays readable until its vectors are relocated/rewritten)."""
+        self.wear.retire((plane, block))
 
     # -- placement -----------------------------------------------------------
     def _home_die(self, die: "int | None" = None) -> int:
@@ -149,6 +169,18 @@ class FTL:
                     self._group_of.pop(n, None)
         self.vectors.pop(self.derived_not_name(name), None)
 
+    def _checkword(self, bits, n_bits: int) -> np.ndarray:
+        """Sampled-parity checkword of a vector being written (positions are
+        deterministic and shared per n_bits, so leaf checkwords compose
+        through op DAGs — see :mod:`repro.reliability.checkwords`)."""
+        n_samples = checkwords.DEFAULT_SAMPLES
+        mgr = getattr(self._session, "reliability", None) \
+            if self._session is not None else None
+        if mgr is not None:
+            n_samples = mgr.policy.check_samples
+        pos = checkwords.sample_positions(n_bits, n_samples)
+        return checkwords.checkword(np.asarray(bits), pos)
+
     def _paginate(self, bits: jnp.ndarray) -> List[jnp.ndarray]:
         pb = self.cfg.page_bits
         n = int(bits.shape[0])
@@ -203,7 +235,9 @@ class FTL:
                             dict(zip(roles, paged)), encoding)
         for name, b, role in zip(names, bits, roles):
             self.vectors[name] = VectorMeta(name, int(b.shape[0]), placement,
-                                            role, die=die, encoding=encoding)
+                                            role, die=die, encoding=encoding,
+                                            check=self._checkword(
+                                                b, int(b.shape[0])))
             self._group_of[name] = tuple(names)
 
     def write_pair_aligned(self, name_a: str, bits_a: jnp.ndarray,
@@ -228,7 +262,9 @@ class FTL:
         self._program_roles(placement, {role: pages}, encoding)
         self.vectors[name] = VectorMeta(name, int(bits.shape[0]), placement,
                                         role, zero_co_page=True, die=die,
-                                        encoding=encoding)
+                                        encoding=encoding,
+                                        check=self._checkword(
+                                            bits, int(bits.shape[0])))
 
     def align(self, name_a: str, name_b: str) -> str:
         """Copyback-realign two scattered MLC vectors into an aligned pair;
@@ -248,10 +284,11 @@ class FTL:
                 dst = self.allocate_wordline(wa[0])
                 self.device.copyback_align(wa, wb, dst, ma.role, mb.role)
                 placement.append(dst)
+        # the copyback preserves data, so the checkwords carry over
         self.vectors[name_a] = VectorMeta(name_a, ma.n_bits, placement, "lsb",
-                                          die=ma.die)
+                                          die=ma.die, check=ma.check)
         self.vectors[name_b] = VectorMeta(name_b, mb.n_bits, placement, "msb",
-                                          die=ma.die)
+                                          die=ma.die, check=mb.check)
         self._group_of[name_a] = self._group_of[name_b] = (name_a, name_b)
         return name_a
 
@@ -270,10 +307,20 @@ class FTL:
         if enc == tlc.MLC and len(names) == 2:
             self.align(names[0], names[1])
             return
+        # Under fault injection a factory-reference readout here would copy
+        # corrupted bits into the new placement AND recompute matching
+        # checkwords — silent, undetectable data loss.  With the reliability
+        # layer active, each vector reads back through the checked/retried
+        # path instead.
+        mgr = getattr(self._session, "reliability", None) \
+            if self._session is not None else None
         with traced(self._tracer, "ftl",
                     f"align-group[{','.join(names)}]", encoding=enc):
             bits = []
             for m in metas:
+                if mgr is not None:
+                    bits.append(jnp.asarray(mgr.read_vector_checked(m)))
+                    continue
                 packed = self.device.page_read_batch(m.pages, m.role,
                                                      encoding=enc)
                 bits.append(

@@ -1,0 +1,38 @@
+"""Wear-aware reliability layer: fault injection, detection, recovery.
+
+Three cooperating pieces (ISSUE 8 / the paper's §8 endurance claim):
+
+- :mod:`repro.reliability.faults` — a seeded, replayable ``FaultModel``
+  installed on :class:`repro.flash.device.FlashDevice` that perturbs Vth rows
+  at program time per Cai-style wear curves (P/E-dependent common-mode drift
+  + bounded distribution widening, retention shift, optional stuck bits /
+  dead blocks).
+- :mod:`repro.reliability.checkwords` — per-vector sampled-parity
+  signatures programmed alongside data; bitwise ops are positionwise, so the
+  stored samples evaluate through the op DAG and predict the result's
+  samples exactly — detection without an oracle.
+- :mod:`repro.reliability.recovery` — on mismatch, a bounded read-retry
+  ladder re-senses the *already lowered* plan with shifted reference stacks
+  (the paper's dynamic sensing used for recovery), escalates to a full
+  reference recalibration sweep, and finally migrates worn blocks to the
+  wide-margin reduced-MLC encoding; every action is booked in the ledger
+  and surfaced through ``repro.obs``.
+
+``recovery`` is imported lazily (``from repro.reliability.recovery import
+ReliabilityManager``) so that :mod:`repro.flash.ftl` can import the
+checkword helpers without a package cycle.
+"""
+from repro.reliability.errors import (BlockRetiredError, ReliabilityError,
+                                      RetryExhaustedError, SenseMismatchError)
+from repro.reliability.faults import FaultConfig, FaultModel
+from repro.reliability.policy import RetryPolicy
+
+__all__ = [
+    "BlockRetiredError",
+    "FaultConfig",
+    "FaultModel",
+    "ReliabilityError",
+    "RetryExhaustedError",
+    "RetryPolicy",
+    "SenseMismatchError",
+]

@@ -11,6 +11,11 @@ The fallback draws ``min(max_examples, REPRO_COMPAT_MAX_EXAMPLES)`` examples
 per test (default 5) from an RNG seeded by the test name, so runs are
 reproducible and reasonably fast; it is a smoke-level substitute, not a
 search-based one — install ``hypothesis`` for real shrinking/coverage.
+
+Derandomization is pinned: the per-test seed derives from the test's
+qualname unless ``REPRO_COMPAT_SEED`` overrides it, and a failing example
+prints the seed, example index, and drawn arguments with a one-line rerun
+hint before re-raising — so a randomized failure is always replayable.
 """
 from __future__ import annotations
 
@@ -102,9 +107,21 @@ except ModuleNotFoundError:  # pragma: no cover - exercised only without hypothe
             def wrapper(*args, **kwargs):
                 n = min(getattr(wrapper, "_max_examples", _FALLBACK_EXAMPLES),
                         _FALLBACK_EXAMPLES)
-                rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
-                for _ in range(max(n, 1)):
-                    fn(*args, *(s.example(rng) for s in strategies), **kwargs)
+                env_seed = os.environ.get("REPRO_COMPAT_SEED")
+                seed = (int(env_seed) if env_seed
+                        else zlib.crc32(fn.__qualname__.encode()))
+                rng = np.random.default_rng(seed)
+                for i in range(max(n, 1)):
+                    drawn = tuple(s.example(rng) for s in strategies)
+                    try:
+                        fn(*args, *drawn, **kwargs)
+                    except BaseException:
+                        print(f"\n[hypothesis_compat] falsifying example for "
+                              f"{fn.__qualname__}: seed={seed} example={i} "
+                              f"args={drawn!r}\n"
+                              f"[hypothesis_compat] rerun with "
+                              f"REPRO_COMPAT_SEED={seed}")
+                        raise
             # Hide the wrapped signature: the strategy-filled parameters must
             # not look like pytest fixtures.
             del wrapper.__wrapped__

@@ -28,6 +28,10 @@ scheduling is caught before a single kernel dispatches, not by sampling:
   slot, each sensing mechanism carries its exact reference arity, and parity
   (band-pattern) reference combs are in strictly monotone valley order, per
   the compiler in :mod:`repro.core.tlc`.
+- ``migration-barrier`` — copyback program steps scheduled *into* the wave
+  timeline (reliability-layer block migrations filling idle die slots) must
+  carry a program barrier against every in-flight sense on the same die:
+  a scheduled program may share its wave only with units on other dies.
 
 Violations raise :class:`PlanInvariantError` with the offending wave/unit
 index, the die where applicable, and a rendered plan excerpt.
@@ -464,6 +468,37 @@ def check_ref_bounds(plan, ctx: PlanContext) -> None:
                 plan=plan, wave=wave, unit=unit)
 
 
+def check_migration_barriers(plan, ctx: PlanContext) -> None:
+    """Copyback programs scheduled into the wave timeline (block-migration
+    relocations) only fill *idle* die slots: a program step with a
+    non-negative wave must not touch any die a sense unit occupies in that
+    wave, and its wave index must exist.  Lowering-time placement writes
+    (wave ``-1``) complete before wave 0 and are exempt."""
+    n_waves = len(plan.waves)
+    for pi, pr in enumerate(getattr(plan, "programs", []) or []):
+        if pr.wave < 0:
+            continue
+        unit = f"program[{pi}]"
+        if pr.wave >= n_waves:
+            raise PlanInvariantError(
+                "migration-barrier",
+                f"program step ({pr.label}) scheduled into wave {pr.wave}"
+                f" but the plan has only {n_waves} wave(s)", plan=plan,
+                wave=pr.wave, unit=unit)
+        prog_dies = {ctx.die_of_plane(p) for p, _, _ in pr.wls}
+        for kind, idx, dies, _ in _wave_units(plan, pr.wave):
+            shared = prog_dies.intersection(dies)
+            if shared:
+                die = min(shared)
+                raise PlanInvariantError(
+                    "migration-barrier",
+                    f"copyback program ({pr.label}) programs die {die} in"
+                    f" wave {pr.wave} while {kind}[{idx}] senses the same"
+                    " die — migration copybacks must fill idle die slots"
+                    " only (program barrier against in-flight senses)",
+                    plan=plan, wave=pr.wave, unit=unit, die=die)
+
+
 def check_paranoid(plan, ctx: PlanContext) -> None:
     """Extra-cost audits (``verify="paranoid"``): recomputed concurrency,
     group-key uniqueness, and span layout of every batched sense output."""
@@ -531,4 +566,5 @@ INVARIANTS: Tuple[Tuple[str, Callable], ...] = (
     ("vmem-budget", check_vmem_budget),
     ("encoding-consistency", check_encoding_consistency),
     ("ref-bounds", check_ref_bounds),
+    ("migration-barrier", check_migration_barriers),
 )

@@ -133,7 +133,8 @@ def test_session_stats_keys_unchanged_and_attr_reads():
                       "sense_waves", "max_concurrent_dies",
                       "megakernel_calls", "tiled_megakernel_splits",
                       "arena_shards", "ledger",
-                      "plans_verified", "verify_cache_hits", "verify"}
+                      "plans_verified", "verify_cache_hits", "verify",
+                      "faults", "reliability"}
     # pre-registry attribute reads still work and are plain ints
     for name in ("fused_reduce_calls", "in_flash_senses", "sense_items",
                  "sense_batches", "sense_waves", "megakernel_calls",

@@ -14,7 +14,8 @@ import numpy as np
 import pytest
 
 from repro.api import ComputeSession
-from repro.api.executor import OPERAND_TILE_BYTES
+from repro.api.executor import (OPERAND_TILE_BYTES, ProgramStep,
+                                schedule_programs_into_idle_waves)
 from repro.flash.geometry import SSDConfig
 from repro.testing.hypothesis_compat import given, settings, st
 from repro.verify import PlanInvariantError, check_plan, render_plan
@@ -147,6 +148,22 @@ def mutate_ref_overflow(plan, ctx, rng):
     return None
 
 
+def mutate_schedule_program_into_busy_wave(plan, ctx, rng):
+    """Slot a migration copyback into a wave whose die is already sensing
+    (a *different* wordline, so slot-hazard stays silent)
+    -> migration-barrier."""
+    m = copy.deepcopy(plan)
+    for wi, wave in enumerate(m.waves):
+        if not wave.groups:
+            continue
+        plane, blk, wl = m.groups[wave.groups[0]].wls[0]
+        m.programs.append(ProgramStep(
+            label="copyback mutant", wls=[(plane, blk, wl + 10_000)],
+            dies=(ctx.die_of_plane(plane),), wave=wi))
+        return m
+    return None
+
+
 MUTATIONS = (
     ("unbook_wave", "ledger-conservation", mutate_unbook_wave),
     ("merge_same_die_wave", "wave-die-disjoint", mutate_merge_same_die_wave),
@@ -156,6 +173,8 @@ MUTATIONS = (
      mutate_inflate_fused_past_vmem),
     ("cross_plan_group", "encoding-consistency", mutate_cross_plan_group),
     ("ref_overflow", "ref-bounds", mutate_ref_overflow),
+    ("schedule_program_into_busy_wave", "migration-barrier",
+     mutate_schedule_program_into_busy_wave),
 )
 
 
@@ -298,6 +317,53 @@ def test_golden_message_ref_bounds_and_encoding():
     assert "group[0]" in str(exc.value)
 
 
+def test_golden_message_migration_barrier():
+    """The migration-safety invariant names the copyback, the clashing
+    wave/die, and the policy it enforces — and rejects out-of-range waves."""
+    sess, expr = _contended_session()
+    plan = sess.lower(expr)
+    ctx = _ctx(sess)
+    mutant = mutate_schedule_program_into_busy_wave(
+        plan, ctx, np.random.default_rng(0))
+    assert mutant is not None
+    with pytest.raises(PlanInvariantError) as exc:
+        check_plan(mutant, ctx)
+    assert exc.value.invariant == "migration-barrier"
+    msg = str(exc.value)
+    assert "copyback program (copyback mutant) programs die 0 in wave 0" in msg
+    assert "migration copybacks must fill idle die slots only" in msg
+    assert "program barrier against in-flight senses" in msg
+    assert exc.value.wave == 0 and exc.value.die == 0
+    assert exc.value.unit.startswith("program[")
+
+    oob = copy.deepcopy(plan)
+    oob.programs.append(ProgramStep(label="copyback oob", wls=[(0, 0, 0)],
+                                    dies=(0,), wave=len(plan.waves)))
+    with pytest.raises(PlanInvariantError) as exc:
+        check_plan(oob, ctx)
+    assert exc.value.invariant == "migration-barrier"
+    assert (f"scheduled into wave {len(plan.waves)}" in str(exc.value)
+            and f"only {len(plan.waves)} wave(s)" in str(exc.value))
+
+
+def test_schedule_programs_into_idle_waves_passes_verifier():
+    """The reliability layer's copyback scheduler only fills idle die
+    slots: a die-1 copyback overlaps a die-0-only wave (and the checked
+    invariant passes), while a die-0 copyback finds no idle slot and
+    falls back to the exempt pre-dispatch barrier wave -1."""
+    sess, expr = _contended_session(dies=2)      # all senses live on die 0
+    plan = sess.lower(expr)
+    ctx = _ctx(sess)
+    plane1 = sess.device.config.planes_per_die   # first plane of die 1
+    idle = ProgramStep(label="copyback idle", wls=[(plane1, 0, 0)], dies=(1,))
+    contended = ProgramStep(label="copyback busy", wls=[(0, 0, 99)], dies=(0,))
+    schedule_programs_into_idle_waves(plan, [idle, contended])
+    assert idle.wave == 0                        # overlaps the sense wave
+    assert contended.wave == -1                  # no idle slot: barrier wave
+    assert idle in plan.programs and contended in plan.programs
+    check_plan(plan, ctx)                        # placement is hazard-free
+
+
 def test_render_plan_windows_to_highlight():
     sess, expr = _contended_session()
     plan = sess.lower(expr)
@@ -388,6 +454,41 @@ def test_ledger_reset_clears_makespan_state():
     # and the model re-accumulates from zero, not from stale step state
     sess.materialize((a & b) ^ (c | d))
     assert led.makespan_us() > 0
+
+
+def test_ledger_reset_no_double_count_on_recovery_resense():
+    """Satellite regression: retry re-senses booked *after* a
+    ``reset_stats()`` must account only their own recovery steps — never
+    re-book the original wave's channel/die step.  Bookings are immediate
+    and stateless, so repeated reset+materialize cycles of a deterministic
+    faulted workload produce bit-identical ledgers."""
+    rng = np.random.default_rng(21)
+    cfg = SSDConfig(page_kb=1)
+    n = cfg.page_bits
+    sess = ComputeSession(config=cfg, backend="sim", encoding="tlc",
+                          faults={"pe": 5000, "seed": 9})
+    a, b = sess.write_pair("a", (rng.random(n) < 0.5).astype(np.uint8),
+                           "b", (rng.random(n) < 0.5).astype(np.uint8))
+    expr = a ^ b
+    sess.materialize(expr)                        # ladder retries fire
+    led = sess.ledger
+    assert led.category_us.get("recovery", 0.0) > 0
+    sess.reset_stats()
+    assert led.category_us == {}
+    assert led.die_step_us == 0 and led.channel_step_us == 0
+
+    sess.materialize(expr)
+    first = (dict(led.category_us), led.die_step_us, led.channel_step_us,
+             led.makespan_us(), led.commands)
+    assert first[0].get("recovery", 0.0) > 0      # re-senses re-book afresh
+    assert first[0].get("sense", 0.0) > 0         # alongside the primary wave
+    sess.reset_stats()
+    sess.materialize(expr)
+    second = (dict(led.category_us), led.die_step_us, led.channel_step_us,
+              led.makespan_us(), led.commands)
+    assert second == first                        # no carryover, no double-count
+    # recovery work is real work: the makespan includes it
+    assert first[3] > first[0]["sense"]
 
 
 # ---------------------------------------------------------------------------
