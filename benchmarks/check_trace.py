@@ -11,7 +11,13 @@ trace-event JSON of the shape :meth:`repro.obs.Tracer.to_chrome` emits:
 - on the virtual-device process (pid 1) the spans of each lane
   (``(pid, tid)``) never overlap — the ledger's schedule-step model
   dispatches one step per resource at a time;
-- the recorded ``otherData.makespan_us`` equals the longest device lane.
+- the recorded ``otherData.makespan_us`` equals the longest device lane;
+- when ``otherData.overlap_mode == "overlap"`` (the ledger's pipelined
+  accounting mode), cross-lane overlap must respect causality: a channel
+  span tagged ``(epoch, wave)`` may overlap die spans only of strictly
+  LATER waves (same epoch) or later epochs — never the die work that
+  produced its bytes — and at least one channel span must actually overlap
+  later die work (otherwise the mode claimed pipelining it never booked).
 """
 from __future__ import annotations
 
@@ -19,6 +25,8 @@ import json
 import sys
 
 DEVICE_PID = 1
+CHANNEL_TID_BASE = 100_000
+HOST_LINK_TID = 200_000
 VALID_PH = {"X", "M", "i", "B", "E"}
 
 
@@ -56,28 +64,72 @@ def check_trace(path: str) -> dict:
                 raise ValueError(f"{path}: X event #{i} ({ev['name']!r}) has "
                                  f"bad dur={ev.get('dur')!r}")
             lanes.setdefault((ev["pid"], ev["tid"]), []).append(
-                (ev["ts"], ev["ts"] + ev["dur"], ev["name"]))
+                (ev["ts"], ev["ts"] + ev["dur"], ev["name"],
+                 ev.get("args", {})))
     if n_x == 0:
         raise ValueError(f"{path}: no complete ('X') span events")
 
     device_end = 0.0
     for (pid, tid), spans in lanes.items():
-        spans.sort()
+        spans.sort(key=lambda s: s[:2])
         if pid == DEVICE_PID:
             device_end = max(device_end, spans[-1][1])
-            for (s0, e0, n0), (s1, e1, n1) in zip(spans, spans[1:]):
+            for (s0, e0, n0, _), (s1, e1, n1, _) in zip(spans, spans[1:]):
                 if s1 < e0 - 1e-9:
                     raise ValueError(
                         f"{path}: lane (pid={pid}, tid={tid}) overlap: "
                         f"{n0!r} [{s0}, {e0}) vs {n1!r} [{s1}, {e1})")
 
-    makespan = doc.get("otherData", {}).get("makespan_us")
+    other = doc.get("otherData", {})
+    makespan = other.get("makespan_us")
     if makespan is not None and abs(device_end - makespan) > 1e-6 * max(1.0, makespan):
         raise ValueError(f"{path}: longest device lane ends at {device_end} "
                          f"but otherData.makespan_us={makespan}")
+    overlapped = 0
+    if other.get("overlap_mode") == "overlap":
+        overlapped = _check_overlap(path, lanes)
     return {"events": len(events), "spans": n_x, "meta": n_meta,
             "instants": n_instant, "lanes": len(lanes),
-            "device_end_us": device_end}
+            "device_end_us": device_end, "overlapped_pairs": overlapped}
+
+
+def _check_overlap(path: str, lanes: dict) -> int:
+    """Overlap-mode causality over the device process: every channel span
+    tagged ``(epoch, wave)`` must overlap only strictly-later die work, and
+    at least one such pipelined overlap must exist."""
+    die_spans, channel_spans = [], []
+    for (pid, tid), spans in lanes.items():
+        if pid != DEVICE_PID:
+            continue
+        for s0, e0, name, args in spans:
+            tag = (args.get("epoch"), args.get("wave"))
+            if tid < CHANNEL_TID_BASE:
+                die_spans.append((s0, e0, name, tag))
+            elif tid < HOST_LINK_TID:
+                channel_spans.append((s0, e0, name, tag))
+    overlapped = 0
+    for cs, ce, cname, (cep, cwave) in channel_spans:
+        if cep is None or cwave is None:
+            continue
+        for ds, de, dname, (dep, dwave) in die_spans:
+            if de <= cs + 1e-9 or ds >= ce - 1e-9:
+                continue               # disjoint: no constraint
+            later = (dep is not None and dwave is not None
+                     and ((dep, dwave) > (cep, cwave)))
+            if not later:
+                raise ValueError(
+                    f"{path}: channel span {cname!r} [{cs}, {ce}) "
+                    f"(epoch={cep}, wave={cwave}) overlaps non-later die "
+                    f"span {dname!r} [{ds}, {de}) (epoch={dep}, "
+                    f"wave={dwave}) — a transfer may overlap only later "
+                    f"waves' die work")
+            overlapped += 1
+    if not overlapped:
+        raise ValueError(
+            f"{path}: otherData.overlap_mode='overlap' but no channel span "
+            f"overlaps any later wave's die span — the pipelined mode "
+            f"booked no pipelining")
+    return overlapped
 
 
 def main(argv: list) -> int:

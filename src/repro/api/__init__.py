@@ -25,12 +25,14 @@ Submodules:
 needed by ``repro.flash.device``); everything else resolves lazily to keep
 the ``core <- flash <- api`` layering cycle-free.
 """
-from repro.api.ledger import Ledger
+from repro.api.ledger import LEDGER_MODES, Ledger
 from repro.api.plan_cache import ExecutableCache, PlanCache
 
 _LAZY = {
     "ComputeSession": "repro.api.session",
     "run_op": "repro.api.session",
+    "DrainHandle": "repro.api.hostio",
+    "HostDrainQueue": "repro.api.hostio",
     "BitVector": "repro.api.graph",
     "simplify": "repro.api.graph",
     "Executor": "repro.api.executor",
@@ -46,7 +48,8 @@ _LAZY = {
     "timeline_report": "repro.obs.report",
 }
 
-__all__ = ["ExecutableCache", "Ledger", "PlanCache", *sorted(_LAZY)]
+__all__ = ["ExecutableCache", "LEDGER_MODES", "Ledger", "PlanCache",
+           *sorted(_LAZY)]
 
 
 def __getattr__(name: str):

@@ -50,6 +50,7 @@ from repro.core import tlc as _tlc
 from repro.core.mcflash import ReadPlan
 from repro.kernels.fused import ROW_TILE, TILE_COLS
 from repro.obs.trace import traced
+from repro.verify.invariants import check_overlap_consistency
 
 __all__ = ["ExecPlan", "Executor", "ProgramStep", "Wave",
            "DEFAULT_VMEM_BUDGET_BYTES", "schedule_programs_into_idle_waves"]
@@ -553,6 +554,30 @@ class Executor:
         """Tiled passes a fused spec needs under the VMEM budget."""
         return -(-n_operands // self.max_fused_operands)
 
+    def _placement_layout(self, plan: ExecPlan) -> Optional[tuple]:
+        """Device-placement layout of a plan on this session's device, or
+        ``None`` when the arena's shards are unmapped (single default
+        device).  The layout joins the ExecutableCache key so placed and
+        unplaced compilations of one plan signature never collide: a placed
+        runner bakes in *which JAX device each unit's inputs arrive on*
+        (single-die units on their shard's device, cross-die units on the
+        primary), so reusing it for unplaced inputs — or for the same dies
+        remapped onto different devices — would silently mis-place work.
+        """
+        arena = self.session.device.arena
+        if not getattr(arena, "devices", None):
+            return None
+
+        def unit_dev(dies: Tuple[int, ...]):
+            if len(dies) == 1:
+                return arena.device_of(dies[0]).id
+            return arena.compute_device().id   # cross-die units funnel
+
+        return (tuple(unit_dev(g.dies) for g in plan.groups),
+                tuple(unit_dev(st.fused.dies) for st in plan.steps
+                      if st.fused is not None),
+                arena.compute_device().id)
+
     # -- internals ---------------------------------------------------------------
     def _execute(self, node: Node, n_bits: int, popcount: bool):
         sess = self.session
@@ -565,11 +590,18 @@ class Executor:
         # or dispatch; memoized per signature so cache-hit plans pay ~nothing
         sig = plan.signature(sess.backend.name)
         sess.verify_lowered_plan(plan, sig)
-        self._account(plan)
+        layout = self._placement_layout(plan)
+        self._account(plan, placed=layout is not None)
+        ledger = sess.device.ledger
+        if sess.verifier.enabled and ledger.mode != "independent":
+            # the overlap-consistency invariant audits the ledger's freshly
+            # booked step log: transfers may overlap only LATER waves' work
+            check_overlap_consistency(ledger, plan=plan)
         # the cache is per-device (one chip), and signature() leads with the
-        # backend name — only interpret mode and the tiling width need adding
+        # backend name — interpret mode, the tiling width, and the device-
+        # placement layout complete the key
         key = (getattr(sess.backend, "interpret", None),
-               self.max_fused_operands, sig, popcount)
+               self.max_fused_operands, sig, popcount, layout)
         if tracer is not None:
             hit = key in self.cache
             tracer.instant("cache", "executable-hit" if hit
@@ -580,10 +612,14 @@ class Executor:
             def build():
                 with tracer.span("compile", "build-executable",
                                  waves=len(plan.waves)):
-                    return self._build(plan, popcount)
+                    return (self._build_placed(plan, popcount)
+                            if layout is not None
+                            else self._build(plan, popcount))
         else:
             def build():
-                return self._build(plan, popcount)
+                return (self._build_placed(plan, popcount)
+                        if layout is not None
+                        else self._build(plan, popcount))
         fn = self.cache.get(key, build)
         if tracer is not None and self.cache.evictions > evictions0:
             tracer.instant("cache", "executable-evicted",
@@ -592,16 +628,23 @@ class Executor:
         # The arena shard-gathers run OUTSIDE the cached executable (one
         # gather per die shard touched), so executable input shapes depend
         # only on the plan signature — shard growth must not retrace cached
-        # executables.
+        # executables.  With mapped shards (placed dispatch) the single-die
+        # gathers stay on their OWN shard's device instead of funneling
+        # through the primary — each wave unit's kernel then dispatches on
+        # the device its inputs committed to.
+        place = layout is None
         with traced(tracer, "dispatch", "dispatch-waves",
                     waves=len(plan.waves)):
-            group_vth = tuple(dev.vth_stack(g.wls) for g in plan.groups)
-            fused_vth = tuple(dev.vth_stack(st.fused.wls) for st in plan.steps
-                              if st.fused is not None)
+            group_vth = tuple(dev.vth_stack(g.wls, place=place)
+                              for g in plan.groups)
+            fused_vth = tuple(dev.vth_stack(st.fused.wls, place=place)
+                              for st in plan.steps if st.fused is not None)
             mask = sess.tail_mask(n_bits, plan.out_words)
+            if layout is not None:
+                mask = dev.arena.to_compute(mask)
             return fn(group_vth, fused_vth, mask)
 
-    def _account(self, plan: ExecPlan) -> None:
+    def _account(self, plan: ExecPlan, placed: bool = False) -> None:
         """Wave-batched ledger + counter updates: ONE parallel die step and
         one channel step per schedule wave (concurrent per-die groups in a
         wave overlap in the ledger's die-parallel makespan), each labeled
@@ -609,6 +652,9 @@ class Executor:
         sess = self.session
         dev = sess.device
         tracer = sess.trace
+        # group wave tags: wave indices restart per plan, so the step log
+        # compares them only within one epoch
+        dev.ledger.begin_epoch()
         n_fused = n_chunks = 0
         for wi, wave in enumerate(plan.waves):
             per_die: Dict[int, float] = {}
@@ -651,12 +697,15 @@ class Executor:
             label = f"wave {wi}: {'+'.join(parts)}" if parts else None
             if per_die:
                 dev.ledger.add_die_batch(per_die, uj, commands=cmds,
-                                         label=label)
+                                         label=label, wave=wi)
                 sess.metrics.histogram("wave_dies").observe(len(per_die))
             if per_ch:
                 dev.ledger.add_channel_batch(
-                    per_ch, label=f"wave {wi}: dma" if parts else None)
+                    per_ch, label=f"wave {wi}: dma" if parts else None,
+                    wave=wi)
         m = sess.metrics
+        if placed:
+            m.counter("placed_unit_dispatches").add(len(plan.groups) + n_fused)
         m.counter("in_flash_senses").add(plan.senses)
         m.counter("sense_items").add(plan.items)
         m.counter("sense_batches").add(len(plan.groups) + n_fused)
@@ -744,3 +793,93 @@ class Executor:
             return out
 
         return jax.jit(run)
+
+    def _build_placed(self, plan: ExecPlan, popcount: bool):
+        """Close a device-placed wave runner over the static plan.
+
+        Unlike :meth:`_build`, this is NOT one monolithic ``jax.jit`` — a
+        single jitted program lowers onto one device, which is exactly the
+        funnel placed dispatch removes.  Instead the runner is plain Python
+        around the backend's (individually jitted) kernel entry points:
+        each wave unit's call dispatches asynchronously on the device its
+        gathered inputs committed to (its die's shard device), so same-wave
+        units on distinct shards genuinely run on distinct JAX devices.
+        Cross-device data motion is explicit and arena-mediated: partials
+        hop to the primary compute device only when a controller combine
+        consumes them.
+
+        The closure captures the backend, the static plan, a trace-counter
+        cell, and the *arena's bound placement methods* — never the
+        executor/session (the executable cache is device-shared and must
+        not pin dead sessions)."""
+        backend = self.session.backend
+        max_ops = self.max_fused_operands
+        arena = self.session.device.arena
+        to_compute = arena.to_compute      # bound: survives session teardown
+        colocate = arena.colocate
+        # dispatches follow input placement eagerly, so there is no single
+        # jit trace: count the build itself as the one trace event
+        self._traces.n += 1
+        fuse_pc = (popcount and bool(plan.steps)
+                   and plan.steps[-1].out == plan.root
+                   and plan.steps[-1].fused is not None)
+        fused_pos = {si: k for k, si in enumerate(
+            si for si, st in enumerate(plan.steps) if st.fused is not None)}
+
+        def fused_reduce(st: CombineStep, vth: jnp.ndarray) -> jnp.ndarray:
+            f = st.fused
+            if f.n_operands <= max_ops:
+                return backend.sense_reduce(vth, f.plan, op=st.op,
+                                            invert=st.invert)
+            parts = [backend.sense_reduce(vth[s:s + max_ops], f.plan,
+                                          op=st.op, invert=False)
+                     for s in range(0, f.n_operands, max_ops)]
+            return backend.reduce(jnp.stack(parts), st.op, invert=st.invert)
+
+        def run(group_vth, fused_vth, mask):
+            partials: Dict[int, jnp.ndarray] = {}
+            for wave in plan.waves:
+                # per-die sense groups and fused megakernels of one wave:
+                # issued back-to-back without synchronizing, so shards'
+                # devices overlap their execution
+                for gi in wave.groups:
+                    g = plan.groups[gi]
+                    packed = backend.sense(group_vth[gi], g.plan)
+                    for pid, (s, e) in g.spans():
+                        partials[pid] = packed[s:e].reshape(-1)
+                for si in wave.fused:
+                    st = plan.steps[si]
+                    f = st.fused
+                    vth = fused_vth[fused_pos[si]].reshape(
+                        f.n_operands, f.n_pages, -1)
+                    if fuse_pc and st.out == plan.root:
+                        mask2 = colocate(mask, vth).reshape(f.n_pages, -1)
+                        if f.n_operands <= max_ops:
+                            counts = backend.sense_reduce_popcount(
+                                vth, f.plan, mask2, op=st.op,
+                                invert=st.invert)
+                        else:
+                            words = fused_reduce(st, vth).reshape(
+                                f.n_pages, -1) & mask2
+                            counts = backend.popcount(words)
+                        return jnp.sum(counts, dtype=jnp.int32)
+                    partials[st.out] = fused_reduce(st, vth).reshape(-1)
+                for ci in wave.combines:
+                    st = plan.steps[ci]
+                    if len(st.args) == 1 and not st.invert:
+                        partials[st.out] = partials[st.args[0]]
+                    else:
+                        # controller combine: collect shard-local partials
+                        # on the primary compute device
+                        stack = jnp.stack([to_compute(partials[a])
+                                           for a in st.args])
+                        out = backend.reduce(
+                            stack.reshape(len(st.args), 1, -1),
+                            st.op, invert=st.invert)
+                        partials[st.out] = out.reshape(-1)
+            out = to_compute(partials[plan.root]) & mask
+            if popcount:
+                return backend.popcount(out.reshape(1, -1))[0]
+            return out
+
+        return run

@@ -28,6 +28,7 @@ import numpy as np
 from repro.api.backends import Backend, get_backend
 from repro.api.executor import OPERAND_TILE_BYTES, ExecPlan, Executor
 from repro.api.graph import ASSOCIATIVE, BitVector, Leaf, simplify
+from repro.api.hostio import DrainHandle, HostDrainQueue
 from repro.api.plan_cache import PlanCache
 from repro.core import encoding, tlc
 from repro.core import mcflash as _mcflash
@@ -51,6 +52,9 @@ _SESSION_COUNTERS = (
     ("sense_waves", "topology-schedule waves dispatched"),
     ("megakernel_calls", "fused sense->reduce(->popcount) passes"),
     ("tiled_megakernel_splits", "fused chains split for VMEM budget"),
+    ("placed_unit_dispatches", "wave units dispatched on pinned shard devices"),
+    ("host_drain_submits", "async controller->host transfers enqueued"),
+    ("host_drain_blocks", "drain-queue backpressure stalls (queue full)"),
 )
 
 
@@ -61,7 +65,9 @@ class ComputeSession:
                  ftl=None, chip=None, config=None, timing=None, energy=None,
                  seed: int = 0, vmem_budget_bytes: "int | None" = None,
                  encoding: str = tlc.MLC, trace: "bool | Tracer" = False,
-                 verify: "str | None" = None, faults=None, recovery=None):
+                 verify: "str | None" = None, faults=None, recovery=None,
+                 overlap: "bool | str | None" = None,
+                 drain_depth: "int | None" = None):
         # Deferred imports keep repro.api import-light and cycle-free.
         from repro.flash.device import FlashDevice
         from repro.flash.ftl import FTL
@@ -105,6 +111,28 @@ class ComputeSession:
         self.device.set_default_backend(self.backend)
         self.plans: PlanCache = self.device.plans     # shared per-chip plan cache
         self.ledger = self.device.ledger
+        #: inter-resource ledger timing mode: ``overlap=None`` leaves the
+        #: (device-shared) ledger's mode alone; ``True`` / ``"overlap"``
+        #: books host-link/channel steps concurrently with later waves' die
+        #: work (double-buffered pipelining, ``drain_depth`` deep),
+        #: ``"sync"`` is the non-overlapped baseline (every step waits for
+        #: everything booked before it), ``False`` / ``"independent"``
+        #: restores the historical free-running timelines.  Latest session
+        #: on a shared device wins, consistent with set_default_backend.
+        if overlap is not None or drain_depth is not None:
+            if overlap is None:
+                mode = self.ledger.mode
+            elif overlap is True or overlap == "overlap":
+                mode = "overlap"
+            elif overlap == "sync":
+                mode = "sync"
+            elif overlap is False or overlap == "independent":
+                mode = "independent"
+            else:
+                raise ValueError(
+                    f"overlap must be True/False, 'overlap', 'sync', or "
+                    f"'independent', got {overlap!r}")
+            self.ledger.set_mode(mode, drain_depth=drain_depth)
         self.executor = Executor(self, vmem_budget_bytes=vmem_budget_bytes)
         #: static ExecPlan verifier (``"off"`` | ``"on"`` | ``"paranoid"``),
         #: run at lowering time and memoized by plan signature; default from
@@ -123,6 +151,13 @@ class ComputeSession:
                            "widest per-wave die concurrency seen")
         self.metrics.histogram("wave_dies", "concurrent dies per wave")
         self.metrics.histogram("fused_operands", "operands per megakernel")
+        #: bounded async controller->host drain queue backing
+        #: :meth:`materialize_async` — transfers stream while the next
+        #: expression senses; depth follows the ledger's ``drain_depth``
+        self.host_queue = HostDrainQueue(
+            depth=self.ledger.drain_depth,
+            on_submit=self._on_drain_submit,
+            on_block=lambda: self.metrics.counter("host_drain_blocks").add(1))
         #: device-timeline tracer (``trace=True`` builds one; pass a
         #: :class:`repro.obs.Tracer` to share/configure it).  Attaches to the
         #: device ledger, so every command this session triggers — senses,
@@ -272,6 +307,35 @@ class ComputeSession:
             return kops.unpack_bits(packed.reshape(1, -1))[0][: expr.n_bits]
         return packed
 
+    def _on_drain_submit(self, n_bytes: int) -> None:
+        self.metrics.counter("host_drain_submits").add(1)
+        # booked at submit time: in the ledger's "overlap" mode the host
+        # step starts at the channel frontier, concurrent with the NEXT
+        # expression's die waves — exactly the pipelined shape the queue
+        # realizes on the wall clock
+        self.device.ext_to_host(n_bytes)
+
+    def materialize_async(self, expr: BitVector) -> DrainHandle:
+        """Compile + execute like :meth:`materialize`, but stream the packed
+        result to the host *asynchronously* through the bounded drain queue:
+        returns a :class:`~repro.api.hostio.DrainHandle` immediately so the
+        caller can dispatch the next expression while this result's
+        controller->host transfer overlaps it.  ``handle.result()`` (or
+        :meth:`drain`) blocks for the bytes.  Submitting past the queue
+        depth blocks on the oldest in-flight transfer (double-buffer
+        backpressure)."""
+        node = simplify(expr.node)
+        packed = self.executor.run(node, expr.n_bits)
+        if self.reliability is not None:
+            packed = self.reliability.verify_and_recover(node, expr.n_bits,
+                                                         packed)
+        return self.host_queue.submit(packed, int(packed.shape[-1]) * 4)
+
+    def drain(self) -> List[np.ndarray]:
+        """Resolve every in-flight :meth:`materialize_async` transfer;
+        returns the packed host arrays in submit order."""
+        return [h.result() for h in self.host_queue.drain()]
+
     def tail_mask(self, n_bits: int, total_words: int) -> jnp.ndarray:
         """Packed (total_words,) mask zeroing page-padding bits past
         ``n_bits`` (inverse-read ops turn padded zeros into ones, which would
@@ -323,6 +387,11 @@ class ComputeSession:
             "max_concurrent_dies": self.max_concurrent_dies,
             "megakernel_calls": self.megakernel_calls,
             "tiled_megakernel_splits": self.tiled_megakernel_splits,
+            "placed_unit_dispatches": self.placed_unit_dispatches,
+            "host_drain": {"submits": self.host_drain_submits,
+                           "blocks": self.host_drain_blocks,
+                           "pending": len(self.host_queue),
+                           "depth": self.host_queue.depth},
             "plans_verified": self.verifier.plans_verified,
             "verify_cache_hits": self.verifier.cache_hits,
             "verify": {"mode": self.verifier.mode,
@@ -344,6 +413,7 @@ class ComputeSession:
         tracer keeps its spans (``sess.trace.clear()`` drops them)."""
         self.metrics.reset()
         self.verifier.reset()
+        self.host_queue.reset()
         if self.reliability is not None:
             self.reliability.reset()
         if include_ledger:

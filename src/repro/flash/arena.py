@@ -249,23 +249,61 @@ class ShardedVthArena:
             self.shard(die).write([refs[i][1] for i in idxs], rows[jnp.asarray(idxs)])
 
     def _to_compute(self, x: jnp.ndarray) -> jnp.ndarray:
-        """Executable inputs must share one device: with mapped shards, land
-        gathers on the primary mapped device (dispatching each per-die kernel
-        on its own shard's device is a roadmap item)."""
+        """Move an array onto the primary compute device (a no-op when the
+        shards are unmapped) — the one-device funnel the *unplaced*
+        executable path needs, since a monolithic jitted executable's inputs
+        must share a device."""
         return jax.device_put(x, self.devices[0]) if self.devices else x
 
-    def gather(self, refs: Sequence[SlotRef]) -> jnp.ndarray:
+    #: public alias: the executor's device-placed runners use this to collect
+    #: cross-die partials for controller combines (arena-owned so the ledger
+    #: linter's transfer rules stay centralized here)
+    to_compute = _to_compute
+
+    def compute_device(self):
+        """The primary compute device (None when shards are unmapped)."""
+        return self.devices[0] if self.devices else None
+
+    def colocate(self, x: jnp.ndarray, like: jnp.ndarray) -> jnp.ndarray:
+        """Place ``x`` on the device holding ``like`` (no-op when shards are
+        unmapped or ``like`` is uncommitted) — the placed executor uses this
+        to ship per-unit auxiliaries (the padding mask) to a shard-local
+        kernel call, since one kernel cannot mix committed devices."""
+        if not self.devices:
+            return x
+        devs = getattr(like, "devices", None)
+        if devs is None:
+            return x
+        (dev,) = devs()
+        return jax.device_put(x, dev)
+
+    def device_of(self, die: int):
+        """The JAX device pinning ``die``'s shard (None when unmapped)."""
+        if not self.devices:
+            return None
+        return self.devices[die % len(self.devices)]
+
+    def gather(self, refs: Sequence[SlotRef], *,
+               place: bool = True) -> jnp.ndarray:
         """(len(refs), page_bits) rows — ONE gather per touched shard.
 
         Die-local requests (the per-die sense groups) hit the single-shard
         fast path; cross-die requests (a fused megakernel spanning dies)
         concatenate the per-shard gathers and restore request order.
+
+        ``place`` controls the single-device funnel for mapped shards:
+        ``True`` (default) lands the result on the primary compute device —
+        what a monolithic jitted executable needs; ``False`` leaves a
+        die-local gather on its *own shard's* device, so the executor's
+        device-placed wave dispatch senses each die's pages where they live
+        (cross-die requests still concatenate on the compute device — a
+        single kernel call cannot span devices).
         """
         refs = list(refs)
         dies = {int(d) for d, _ in refs}
         if len(dies) == 1:
-            return self._to_compute(
-                self.shard(dies.pop()).gather([s for _, s in refs]))
+            local = self.shard(dies.pop()).gather([s for _, s in refs])
+            return self._to_compute(local) if place else local
         by_die: Dict[int, List[int]] = {}
         pos: List[Tuple[int, int]] = []       # (die, index within die gather)
         for die, slot in refs:

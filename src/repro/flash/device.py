@@ -114,11 +114,15 @@ class FlashDevice:
         return sub
 
     # -- arena access (the compiled executor's input surface) ----------------
-    def vth_stack(self, wls: List[WordlineKey]) -> jnp.ndarray:
+    def vth_stack(self, wls: List[WordlineKey], *,
+                  place: bool = True) -> jnp.ndarray:
         """(N, page_bits) Vth of a wordline batch — one gather per touched
         die shard (die-local batches, the per-die sense groups, hit the
-        single-shard fast path)."""
-        return self.arena.gather([self._slot_of[wl] for wl in wls])
+        single-shard fast path).  ``place=False`` leaves a die-local gather
+        on its shard's pinned device (device-placed wave dispatch); the
+        default funnels onto the primary compute device."""
+        return self.arena.gather([self._slot_of[wl] for wl in wls],
+                                 place=place)
 
     # -- commands -----------------------------------------------------------
     def program_shared_batch(self, wls: List[WordlineKey],

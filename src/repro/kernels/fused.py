@@ -33,6 +33,31 @@ LANES = 128
 WORD_BITS = 32
 TILE_COLS = LANES * WORD_BITS  # 4096
 ROW_TILE = 8                   # sublane-aligned row tile
+#: VMEM ceiling the automatic column-tile widening respects on compiled
+#: backends (operand tiles resident per fused pass)
+COL_TILE_VMEM_BUDGET_BYTES = 4 * 1024 * 1024
+
+
+def _auto_col_tiles(n: int, c: int, interpret: bool) -> int:
+    """Column tiles (of TILE_COLS) streamed per grid step.
+
+    Per-grid-step dispatch overhead dominates these kernels — in interpret
+    mode (the CPU default) each step replays the whole Python kernel body,
+    and wider blocks amortize it dramatically (~9x on the quick-benchmark
+    shapes).  Interpret mode therefore takes the whole row width in ONE
+    step; compiled backends take the widest divisor of the width whose
+    operand block (``n x ROW_TILE x k*TILE_COLS`` float32) still fits the
+    VMEM budget.
+    """
+    t = c // TILE_COLS
+    if interpret:
+        return t
+    k_max = max(1, COL_TILE_VMEM_BUDGET_BYTES
+                // max(1, n * ROW_TILE * TILE_COLS * 4))
+    for k in range(min(t, k_max), 0, -1):
+        if t % k == 0:
+            return k
+    return 1
 
 
 def _sense_tile(v: jnp.ndarray, refs_ref, kind: str, invert: bool,
@@ -53,10 +78,15 @@ def _combine(acc: jnp.ndarray, nxt: jnp.ndarray, op: str) -> jnp.ndarray:
 
 
 def _pack(bits: jnp.ndarray) -> jnp.ndarray:
-    """(ROW_TILE, TILE_COLS) bool -> (ROW_TILE, LANES) lane-major uint32."""
-    b = bits.astype(jnp.uint32).reshape(bits.shape[0], WORD_BITS, LANES)
-    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)[None, :, None]
-    return jnp.sum(b << shifts, axis=1, dtype=jnp.uint32)
+    """(ROW_TILE, k*TILE_COLS) bool -> (ROW_TILE, k*LANES) lane-major uint32
+    (each TILE_COLS-wide stripe packs independently, so k > 1 blocks pack
+    exactly like k adjacent width-1 blocks)."""
+    rows, cols = bits.shape
+    k = cols // TILE_COLS
+    b = bits.astype(jnp.uint32).reshape(rows, k, WORD_BITS, LANES)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)[None, None, :, None]
+    return jnp.sum(b << shifts, axis=2,
+                   dtype=jnp.uint32).reshape(rows, k * LANES)
 
 
 def _popcount(v: jnp.ndarray) -> jnp.ndarray:
@@ -90,7 +120,11 @@ def _sense_reduce_popcount_kernel(refs_ref, vth_ref, mask_ref, out_ref, *, n,
     words = _pack(_sense_reduce_acc(
         refs_ref, vth_ref, n=n, kind=kind, sense_invert=sense_invert,
         op=op, invert=invert, n_refs=n_refs)) & mask_ref[...]
-    pc = _popcount(words)                       # (ROW_TILE, LANES)
+    pcw = _popcount(words)                      # (ROW_TILE, k*LANES)
+    rows, cols = pcw.shape
+    # fold the k column stripes of a wide block into one LANES-wide slab
+    pc = jnp.sum(pcw.reshape(rows, cols // LANES, LANES), axis=1,
+                 dtype=jnp.int32)              # (ROW_TILE, LANES)
 
     @pl.when(j == 0)
     def _init():
@@ -110,20 +144,27 @@ def _check_shapes(vth: jnp.ndarray) -> tuple[int, int, int]:
 
 
 @functools.partial(jax.jit, static_argnames=("kind", "sense_invert", "op",
-                                             "invert", "n_refs", "interpret"))
+                                             "invert", "n_refs", "interpret",
+                                             "col_tiles"))
 def sense_reduce(vth: jnp.ndarray, refs: jnp.ndarray, *, kind: str,
                  sense_invert: bool, op: str, invert: bool = False,
-                 n_refs: int = 0, interpret: bool = True) -> jnp.ndarray:
+                 n_refs: int = 0, interpret: bool = True,
+                 col_tiles: "int | None" = None) -> jnp.ndarray:
     """Fused chain: (N, R, C) Vth -> (R, C//32) packed op-reduction.
 
     Each of the N operands is sensed with the same ``refs``/``kind`` (and
     per-sense inverse-read when ``sense_invert``), folded with ``op``, with
     an optional final inversion — all inside one kernel.  ``n_refs`` is
-    required (and used) only by kind='parity'.
+    required (and used) only by kind='parity'.  ``col_tiles`` widens each
+    grid step to that many TILE_COLS column stripes (must divide
+    ``C // TILE_COLS``); ``None`` auto-tunes via :func:`_auto_col_tiles`.
     """
     n, r, c = _check_shapes(vth)
+    if col_tiles is None:
+        col_tiles = _auto_col_tiles(n, c, interpret)
+    assert (c // TILE_COLS) % col_tiles == 0, (c, col_tiles)
     refs = pad_refs(refs)
-    grid = (r // ROW_TILE, c // TILE_COLS)
+    grid = (r // ROW_TILE, c // (col_tiles * TILE_COLS))
     return pl.pallas_call(
         functools.partial(_sense_reduce_kernel, n=n, kind=kind,
                           sense_invert=sense_invert, op=op, invert=invert,
@@ -132,10 +173,11 @@ def sense_reduce(vth: jnp.ndarray, refs: jnp.ndarray, *, kind: str,
             num_scalar_prefetch=1,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((n, ROW_TILE, TILE_COLS),
+                pl.BlockSpec((n, ROW_TILE, col_tiles * TILE_COLS),
                              lambda i, j, refs: (0, i, j)),
             ],
-            out_specs=pl.BlockSpec((ROW_TILE, LANES), lambda i, j, refs: (i, j)),
+            out_specs=pl.BlockSpec((ROW_TILE, col_tiles * LANES),
+                                   lambda i, j, refs: (i, j)),
         ),
         out_shape=jax.ShapeDtypeStruct((r, c // WORD_BITS), jnp.uint32),
         interpret=interpret,
@@ -143,22 +185,29 @@ def sense_reduce(vth: jnp.ndarray, refs: jnp.ndarray, *, kind: str,
 
 
 @functools.partial(jax.jit, static_argnames=("kind", "sense_invert", "op",
-                                             "invert", "n_refs", "interpret"))
+                                             "invert", "n_refs", "interpret",
+                                             "col_tiles"))
 def sense_reduce_popcount(vth: jnp.ndarray, refs: jnp.ndarray,
                           mask: jnp.ndarray, *, kind: str, sense_invert: bool,
                           op: str, invert: bool = False, n_refs: int = 0,
-                          interpret: bool = True) -> jnp.ndarray:
+                          interpret: bool = True,
+                          col_tiles: "int | None" = None) -> jnp.ndarray:
     """Fused chain + popcount: (N, R, C) Vth -> (R,) int32 bit counts.
 
     ``mask`` is (R, C//32) packed uint32 ANDed into the reduced words before
     counting (zeroes the page-padding tail, which inverse-read ops would
     otherwise count as ones).  Only the counts leave the kernel — the packed
-    result never round-trips through HBM.
+    result never round-trips through HBM.  ``col_tiles`` widens the column
+    blocks exactly as in :func:`sense_reduce` (the kernel folds each wide
+    block's stripes into the same LANES-wide accumulator slab).
     """
     n, r, c = _check_shapes(vth)
     assert mask.shape == (r, c // WORD_BITS), mask.shape
+    if col_tiles is None:
+        col_tiles = _auto_col_tiles(n, c, interpret)
+    assert (c // TILE_COLS) % col_tiles == 0, (c, col_tiles)
     refs = pad_refs(refs)
-    grid = (r // ROW_TILE, c // TILE_COLS)
+    grid = (r // ROW_TILE, c // (col_tiles * TILE_COLS))
     lanes = pl.pallas_call(
         functools.partial(_sense_reduce_popcount_kernel, n=n, kind=kind,
                           sense_invert=sense_invert, op=op, invert=invert,
@@ -167,9 +216,10 @@ def sense_reduce_popcount(vth: jnp.ndarray, refs: jnp.ndarray,
             num_scalar_prefetch=1,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((n, ROW_TILE, TILE_COLS),
+                pl.BlockSpec((n, ROW_TILE, col_tiles * TILE_COLS),
                              lambda i, j, refs: (0, i, j)),
-                pl.BlockSpec((ROW_TILE, LANES), lambda i, j, refs: (i, j)),
+                pl.BlockSpec((ROW_TILE, col_tiles * LANES),
+                             lambda i, j, refs: (i, j)),
             ],
             out_specs=pl.BlockSpec((ROW_TILE, LANES), lambda i, j, refs: (i, 0)),
         ),

@@ -67,6 +67,10 @@ class Tracer:
         self.device_spans: List[Span] = []
         self.wall_spans: List[Span] = []
         self.instants: List[dict] = []
+        #: extra ``otherData`` keys for the Chrome export — the ledger
+        #: records its inter-resource timing mode (and overlap totals) here
+        #: so trace checkers know whether cross-lane overlap is expected
+        self.meta: Dict[str, object] = {}
         self.max_spans = max_spans
         self.dropped = 0
         self._die_steps = 0         # parallel die dispatch steps seen
@@ -204,7 +208,8 @@ class Tracer:
         return {"traceEvents": events, "displayTimeUnit": "ms",
                 "otherData": {"tracer": "repro.obs",
                               "makespan_us": self.makespan_us(),
-                              "dropped_spans": self.dropped}}
+                              "dropped_spans": self.dropped,
+                              **self.meta}}
 
     def export(self, path: str) -> str:
         """Write the Chrome trace-event JSON to ``path``; returns the path."""
@@ -222,6 +227,7 @@ class Tracer:
         self.device_spans.clear()
         self.wall_spans.clear()
         self.instants.clear()
+        self.meta.clear()
         self.dropped = 0
         self._die_steps = self._channel_steps = 0
 

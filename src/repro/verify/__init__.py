@@ -25,6 +25,7 @@ from repro.verify.invariants import (
     INVARIANTS,
     PlanContext,
     PlanInvariantError,
+    check_overlap_consistency,
     render_plan,
 )
 from repro.verify.plan_check import PlanVerifier, check_plan
@@ -34,6 +35,7 @@ __all__ = [
     "PlanContext",
     "PlanInvariantError",
     "PlanVerifier",
+    "check_overlap_consistency",
     "check_plan",
     "render_plan",
 ]

@@ -43,7 +43,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.kernels.ref import MAX_REFS
 
-__all__ = ["INVARIANTS", "PlanContext", "PlanInvariantError", "render_plan"]
+__all__ = ["INVARIANTS", "PlanContext", "PlanInvariantError", "render_plan",
+           "check_overlap_consistency"]
 
 #: reference arity of each non-parity sensing mechanism (Table 1)
 _KIND_REFS = {"lsb": 1, "msb": 2, "sbr": 4}
@@ -538,6 +539,58 @@ def check_paranoid(plan, ctx: PlanContext) -> None:
                 f"group[{gi}] spans cover {cursor} rows of"
                 f" {len(g.wls)} gathered", plan=plan, unit=f"group[{gi}]",
                 wave=_wave_of_group(plan, gi))
+
+
+def check_overlap_consistency(ledger, plan=None,
+                              eps: float = 1e-9) -> None:
+    """Overlap-mode ledger audit (a *timeline* invariant, over the booked
+    :attr:`~repro.api.Ledger.step_log` rather than the static plan): a
+    wave's channel step may overlap only with **later** waves' die steps,
+    never with its own producers.
+
+    Concretely, for every logged channel step ``[t0, t1)``:
+
+    - no die step booked *before* it (its producers — in booking order the
+      executor emits a wave's die step, then its channel step) may still be
+      running at ``t0``: a NAND->controller transfer cannot outrun the
+      senses that produce its data;
+    - any die step booked *after* it that overlaps ``[t0, t1)`` must belong
+      to a strictly later wave of the same plan epoch (or a later epoch) —
+      the double-buffered pipelining the overlap mode models.
+
+    Runs only for the dependency-aware ledger modes (the independent mode
+    intentionally free-runs its timelines); the executor invokes it after
+    accounting each plan when verification is enabled.
+    """
+    if getattr(ledger, "mode", "independent") == "independent":
+        return
+    log = ledger.step_log
+    for i, (kind, epoch, wave, t0, t1) in enumerate(log):
+        if kind != "channel":
+            continue
+        for k2, e2, w2, s2, t2 in log[:i]:
+            if k2 == "die" and t2 > t0 + eps:
+                raise PlanInvariantError(
+                    "overlap-consistency",
+                    f"channel step of wave {wave} (epoch {epoch}) starts at"
+                    f" {t0:.3f}us while a producing die step (wave {w2}) is"
+                    f" still sensing until {t2:.3f}us — a transfer cannot"
+                    " overlap its own producers", plan=plan, wave=wave)
+        for k2, e2, w2, s2, t2 in log[i + 1:]:
+            if k2 != "die" or s2 >= t1 - eps:
+                continue
+            # the die step overlaps this channel step: it must be from a
+            # strictly later wave (same epoch) or a later plan epoch
+            if e2 < epoch or (e2 == epoch and w2 is not None
+                              and wave is not None and w2 <= wave):
+                raise PlanInvariantError(
+                    "overlap-consistency",
+                    f"die step of wave {w2} (epoch {e2}) runs"
+                    f" [{s2:.3f}, {t2:.3f})us inside the channel transfer of"
+                    f" wave {wave} (epoch {epoch})"
+                    f" [{t0:.3f}, {t1:.3f})us — a wave's transfer may"
+                    " overlap only later waves' die work", plan=plan,
+                    wave=wave)
 
 
 def _wave_of_group(plan, gi: int) -> Optional[int]:

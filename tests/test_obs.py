@@ -134,7 +134,8 @@ def test_session_stats_keys_unchanged_and_attr_reads():
                       "megakernel_calls", "tiled_megakernel_splits",
                       "arena_shards", "ledger",
                       "plans_verified", "verify_cache_hits", "verify",
-                      "faults", "reliability"}
+                      "faults", "reliability",
+                      "placed_unit_dispatches", "host_drain"}
     # pre-registry attribute reads still work and are plain ints
     for name in ("fused_reduce_calls", "in_flash_senses", "sense_items",
                  "sense_batches", "sense_waves", "megakernel_calls",
