@@ -17,7 +17,11 @@ trace-event JSON of the shape :meth:`repro.obs.Tracer.to_chrome` emits:
   span tagged ``(epoch, wave)`` may overlap die spans only of strictly
   LATER waves (same epoch) or later epochs — never the die work that
   produced its bytes — and at least one channel span must actually overlap
-  later die work (otherwise the mode claimed pipelining it never booked).
+  later die work (otherwise the mode claimed pipelining it never booked);
+- when ``otherData.serve_requests`` is set (a serving-engine run), every
+  device span tagged with a schedule ``wave`` must carry its owning request
+  ids (non-empty ``args.rids`` — per-request latency attribution), and at
+  least one wall-clock request-lifecycle span (``args.rid``) must exist.
 """
 from __future__ import annotations
 
@@ -88,9 +92,13 @@ def check_trace(path: str) -> dict:
     overlapped = 0
     if other.get("overlap_mode") == "overlap":
         overlapped = _check_overlap(path, lanes)
+    serve_spans = 0
+    if other.get("serve_requests"):
+        serve_spans = _check_serve(path, lanes)
     return {"events": len(events), "spans": n_x, "meta": n_meta,
             "instants": n_instant, "lanes": len(lanes),
-            "device_end_us": device_end, "overlapped_pairs": overlapped}
+            "device_end_us": device_end, "overlapped_pairs": overlapped,
+            "serve_request_spans": serve_spans}
 
 
 def _check_overlap(path: str, lanes: dict) -> int:
@@ -130,6 +138,33 @@ def _check_overlap(path: str, lanes: dict) -> int:
             f"overlaps any later wave's die span — the pipelined mode "
             f"booked no pipelining")
     return overlapped
+
+
+def _check_serve(path: str, lanes: dict) -> int:
+    """Serving-run attribution audit: every wave-tagged device span must
+    name its owning request ids, and the wall clock must carry at least one
+    request-lifecycle span (the per-request p99 input)."""
+    for (pid, tid), spans in lanes.items():
+        if pid != DEVICE_PID:
+            continue
+        for s0, e0, name, args in spans:
+            if args.get("wave") is None:
+                continue               # untagged device commands are exempt
+            rids = args.get("rids")
+            if not rids:
+                raise ValueError(
+                    f"{path}: otherData.serve_requests set but device span "
+                    f"{name!r} [{s0}, {e0}) (wave={args['wave']}) carries no "
+                    f"'rids' — per-request latency attribution is broken")
+    request_spans = sum(
+        1 for (pid, _), spans in lanes.items() if pid != DEVICE_PID
+        for _, _, _, args in spans if args.get("rid") is not None)
+    if request_spans == 0:
+        raise ValueError(
+            f"{path}: otherData.serve_requests set but no wall-clock span "
+            f"carries a request id — no request-lifecycle spans were "
+            f"stamped, so the per-request p99 breakdown is empty")
+    return request_spans
 
 
 def main(argv: list) -> int:

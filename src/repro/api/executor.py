@@ -74,6 +74,10 @@ class SenseItem:
     is_mcflash: bool              # MCFlash sense (True) vs default-ref read
     which: Optional[str] = None   # page-read role when not is_mcflash
     dies: Tuple[int, ...] = ()    # dies this item's pages live on (sorted)
+    #: owning serving-request ids (attribution only — NEVER part of
+    #: plan_key/signature, so coalesced batches still share groups and
+    #: isomorphic batches still share executables)
+    rids: Tuple[int, ...] = ()
 
     @property
     def plan_key(self) -> tuple:
@@ -93,6 +97,8 @@ class FusedSpec:
     #: operands streamed per VMEM-budgeted pass — the declared tile split
     #: the static verifier audits against the session budget
     pass_operands: int = 1
+    #: owning serving-request ids (attribution only, never keyed on)
+    rids: Tuple[int, ...] = ()
 
 
 @dataclasses.dataclass
@@ -132,6 +138,11 @@ class SenseGroup:
     def wls(self) -> List[WordlineKey]:
         return [wl for it in self.items for wl in it.wls]
 
+    @property
+    def rids(self) -> Tuple[int, ...]:
+        """Serving-request ids whose senses coalesced into this group."""
+        return tuple(sorted({r for it in self.items for r in it.rids}))
+
     def spans(self) -> List[Tuple[int, Tuple[int, int]]]:
         """(pid, (row_start, row_end)) slices into the batched sense output."""
         out, start = [], 0
@@ -153,7 +164,11 @@ class Wave:
 
 @dataclasses.dataclass
 class ExecPlan:
-    """Static, signature-keyed execution schedule for one canonical DAG."""
+    """Static, signature-keyed execution schedule for one canonical DAG —
+    or for a *batch* of DAGs lowered together (cross-request coalescing):
+    ``roots`` then lists every root partial in request order while the
+    scalar ``root`` / ``out_pages`` / ``out_words`` keep pointing at the
+    first root for single-root callers."""
     groups: List[SenseGroup]
     steps: List[CombineStep]
     waves: List[Wave]
@@ -165,6 +180,22 @@ class ExecPlan:
     concurrent_dies: int          # max dies busy in one wave
     #: lowering-time placement writes (barrier wave -1), for hazard checking
     programs: List[ProgramStep] = dataclasses.field(default_factory=list)
+    #: batch roots in request order (empty == single-root plan)
+    roots: Tuple[int, ...] = ()
+    roots_pages: Tuple[int, ...] = ()
+    roots_words: Tuple[int, ...] = ()
+
+    @property
+    def all_roots(self) -> Tuple[int, ...]:
+        return self.roots or (self.root,)
+
+    @property
+    def all_root_pages(self) -> Tuple[int, ...]:
+        return self.roots_pages or (self.out_pages,)
+
+    @property
+    def all_root_words(self) -> Tuple[int, ...]:
+        return self.roots_words or (self.out_words,)
 
     def signature(self, backend_name: str) -> tuple:
         """Hashable shape of the plan: everything the executable closes over
@@ -198,7 +229,7 @@ class ExecPlan:
                   for st in self.steps),
             tuple((tuple(w.groups), tuple(w.fused), tuple(w.combines))
                   for w in self.waves),
-            self.root, self.out_words,
+            self.all_roots, self.all_root_words,
         )
 
 
@@ -359,6 +390,18 @@ class _Lowering:
         return pid
 
     def lower(self, root: Node) -> ExecPlan:
+        return self.lower_many([root])
+
+    def lower_many(self, roots: List[Node],
+                   rids: Optional[List[int]] = None) -> ExecPlan:
+        """Lower a batch of canonical DAGs through ONE pass with a shared
+        memo: structurally identical sub-DAGs across requests dedupe for
+        free (Node eq/hash is structural), and sense items from different
+        requests that share a (ReadPlan, die) bucket coalesce into one
+        batched kernel call in :meth:`_group` — the cross-request wave
+        coalescing the serving engine is built on.  ``rids`` (parallel to
+        ``roots``) tags every sense item / fused spec with the owning
+        request ids for per-request trace attribution."""
         # iterative post-order: mixed-op expressions nest one level per op
         # switch, so deep graphs must not recurse.  Leaf children are NOT
         # pre-lowered — ops consume their leaves directly as pair senses;
@@ -370,9 +413,12 @@ class _Lowering:
         prev_log = getattr(self.device, "program_log", None)
         self.device.program_log = log = []
         try:
-            if isinstance(root, Leaf):
-                memo[root] = self._read_leaf(root.name)
-            else:
+            for root in roots:
+                if root in memo:
+                    continue
+                if isinstance(root, Leaf):
+                    memo[root] = self._read_leaf(root.name)
+                    continue
                 stack = [root]
                 while stack:
                     n = stack[-1]
@@ -391,31 +437,79 @@ class _Lowering:
             self.device.program_log = prev_log
         self.programs = [ProgramStep(label, list(wls), self._dies_of(wls))
                          for label, wls in log]
-        return self._finish(memo[root])
+        return self._finish([memo[r] for r in roots], rids)
 
-    def _finish(self, root_pid: int) -> ExecPlan:
-        self._fuse(root_pid)
+    def _finish(self, root_pids: List[int],
+                rids: Optional[List[int]] = None) -> ExecPlan:
+        self._fuse(root_pids)
+        if rids is not None:
+            self._attribute(root_pids, rids)
         groups = self._group()
         waves, concurrent = self._schedule(groups)
         fused_ops = sum(st.fused.n_operands for st in self.steps
                         if st.fused is not None)
         senses = sum(1 for it in self.items if it.is_mcflash) + fused_ops
+        words_per_page = self.ftl.cfg.page_bits // 32
+        pages = tuple(self.pages_of[p] for p in root_pids)
         return ExecPlan(groups=groups, steps=self.steps, waves=waves,
-                        root=root_pid,
-                        out_pages=self.pages_of[root_pid],
-                        out_words=self.pages_of[root_pid]
-                        * (self.ftl.cfg.page_bits // 32),
+                        root=root_pids[0],
+                        out_pages=pages[0],
+                        out_words=pages[0] * words_per_page,
                         senses=senses, items=len(self.items) + fused_ops,
-                        concurrent_dies=concurrent, programs=self.programs)
+                        concurrent_dies=concurrent, programs=self.programs,
+                        roots=tuple(root_pids) if len(root_pids) > 1 else (),
+                        roots_pages=pages if len(root_pids) > 1 else (),
+                        roots_words=tuple(p * words_per_page for p in pages)
+                        if len(root_pids) > 1 else ())
 
-    def _fuse(self, root: int) -> None:
+    def _attribute(self, root_pids: List[int], rids: List[int]) -> None:
+        """Post-fusion attribution pass: walk the producer graph back from
+        each root and tag every reachable sense item / fused spec with the
+        owning request id.  A shared (deduped) sub-DAG accumulates every
+        request that reaches it — exactly the multi-rid tags the coalescing
+        counters and trace spans report."""
+        producer = {st.out: st for st in self.steps}
+        by_pid = {it.pid: it for it in self.items}
+        item_rids: Dict[int, set] = {}
+        fused_rids: Dict[int, set] = {}
+        for root, rid in zip(root_pids, rids):
+            stack = [root]
+            seen: set = set()
+            while stack:
+                pid = stack.pop()
+                if pid in seen:
+                    continue
+                seen.add(pid)
+                it = by_pid.get(pid)
+                if it is not None:
+                    item_rids.setdefault(pid, set()).add(rid)
+                st = producer.get(pid)
+                if st is not None:
+                    if st.fused is not None:
+                        fused_rids.setdefault(st.out, set()).add(rid)
+                    # fused steps' args still name the consumed sense pids;
+                    # those were pruned from self.items, so the walk simply
+                    # finds no item for them — harmless
+                    stack.extend(st.args)
+        for pid, rs in item_rids.items():
+            by_pid[pid].rids = tuple(sorted(rs))
+        for st in self.steps:
+            if st.fused is not None and st.out in fused_rids:
+                st.fused.rids = tuple(sorted(fused_rids[st.out]))
+
+    def _fuse(self, roots: List[int]) -> None:
         """Fold combines over single-use, same-plan senses into megakernels.
 
         Fused operands may live on *different* dies — the kernel call is one
         unit, but its pages sense in parallel across their dies (the spec
         records the spanned die set for scheduling/accounting).
+
+        Every batch root counts as a use, so a sense shared across requests
+        (use >= 2) never folds away into one request's megakernel.
         """
-        use: Dict[int, int] = {root: 1}
+        use: Dict[int, int] = {}
+        for root in roots:
+            use[root] = use.get(root, 0) + 1
         for st in self.steps:
             for a in st.args:
                 use[a] = use.get(a, 0) + 1
@@ -531,12 +625,26 @@ class Executor:
     # -- public entry points ---------------------------------------------------
     def run(self, node: Node, n_bits: int) -> jnp.ndarray:
         """Execute a canonical DAG -> packed 1-D uint32 (tail masked)."""
-        return self._execute(node, n_bits, popcount=False)
+        return self._execute_many([node], [n_bits], (False,))[0]
 
     def run_popcount(self, node: Node, n_bits: int) -> jnp.ndarray:
         """Execute a canonical DAG -> scalar int32 popcount (fusing the count
         into the root megakernel when the plan allows)."""
-        return self._execute(node, n_bits, popcount=True)
+        return self._execute_many([node], [n_bits], (True,))[0]
+
+    def run_batch(self, nodes: List[Node], n_bits_list: List[int],
+                  popcounts: Tuple[bool, ...],
+                  rids: Optional[List[int]] = None) -> List[jnp.ndarray]:
+        """Execute a batch of canonical DAGs through ONE shared lowering:
+        same-(ReadPlan, die) senses from different requests coalesce into
+        shared batched kernel calls and shared schedule waves (the serving
+        engine's cross-request coalescing).  Returns one packed word array
+        (or scalar count, per ``popcounts``) per input DAG, in order."""
+        assert len(nodes) == len(n_bits_list) == len(popcounts), \
+            (len(nodes), len(n_bits_list), len(popcounts))
+        assert rids is None or len(rids) == len(nodes)
+        return list(self._execute_many(nodes, n_bits_list, tuple(popcounts),
+                                       rids))
 
     def stats(self) -> dict:
         return {**self.cache.stats(), "traces": self.traces}
@@ -545,7 +653,13 @@ class Executor:
         """Lower a canonical DAG to its static plan WITHOUT dispatching —
         the plan still passes through the session's verifier, so this is
         the entry point for plan-corpus verification."""
-        plan = _Lowering(self.session).lower(node)
+        return self.lower_many([node])
+
+    def lower_many(self, nodes: List[Node],
+                   rids: Optional[List[int]] = None) -> ExecPlan:
+        """Batch variant of :meth:`lower`: one shared-memo lowering pass
+        over every DAG, verified like any dispatched plan."""
+        plan = _Lowering(self.session).lower_many(nodes, rids)
         self.session.verify_lowered_plan(
             plan, plan.signature(self.session.backend.name))
         return plan
@@ -579,19 +693,22 @@ class Executor:
                 arena.compute_device().id)
 
     # -- internals ---------------------------------------------------------------
-    def _execute(self, node: Node, n_bits: int, popcount: bool):
+    def _execute_many(self, nodes: List[Node], n_bits_list: List[int],
+                      popcounts: Tuple[bool, ...],
+                      rids: Optional[List[int]] = None):
         sess = self.session
         tracer = sess.trace
         # lowering (placement resolution) runs on the host wall clock; the
         # FTL's realignment copybacks inside it also land as device spans
-        with traced(tracer, "lower", "lower"):
-            plan = _Lowering(sess).lower(node)
+        with traced(tracer, "lower", "lower", roots=len(nodes)):
+            plan = _Lowering(sess).lower_many(nodes, rids)
         # static verification runs at lowering time, before any accounting
         # or dispatch; memoized per signature so cache-hit plans pay ~nothing
         sig = plan.signature(sess.backend.name)
         sess.verify_lowered_plan(plan, sig)
         layout = self._placement_layout(plan)
-        self._account(plan, placed=layout is not None)
+        self._account(plan, placed=layout is not None,
+                      attributed=rids is not None)
         ledger = sess.device.ledger
         if sess.verifier.enabled and ledger.mode != "independent":
             # the overlap-consistency invariant audits the ledger's freshly
@@ -599,9 +716,10 @@ class Executor:
             check_overlap_consistency(ledger, plan=plan)
         # the cache is per-device (one chip), and signature() leads with the
         # backend name — interpret mode, the tiling width, and the device-
-        # placement layout complete the key
+        # placement layout complete the key.  rids are NOT keyed: isomorphic
+        # batches from different request mixes replay one executable.
         key = (getattr(sess.backend, "interpret", None),
-               self.max_fused_operands, sig, popcount, layout)
+               self.max_fused_operands, sig, popcounts, layout)
         if tracer is not None:
             hit = key in self.cache
             tracer.instant("cache", "executable-hit" if hit
@@ -612,14 +730,14 @@ class Executor:
             def build():
                 with tracer.span("compile", "build-executable",
                                  waves=len(plan.waves)):
-                    return (self._build_placed(plan, popcount)
+                    return (self._build_placed(plan, popcounts)
                             if layout is not None
-                            else self._build(plan, popcount))
+                            else self._build(plan, popcounts))
         else:
             def build():
-                return (self._build_placed(plan, popcount)
+                return (self._build_placed(plan, popcounts)
                         if layout is not None
-                        else self._build(plan, popcount))
+                        else self._build(plan, popcounts))
         fn = self.cache.get(key, build)
         if tracer is not None and self.cache.evictions > evictions0:
             tracer.instant("cache", "executable-evicted",
@@ -639,12 +757,14 @@ class Executor:
                               for g in plan.groups)
             fused_vth = tuple(dev.vth_stack(st.fused.wls, place=place)
                               for st in plan.steps if st.fused is not None)
-            mask = sess.tail_mask(n_bits, plan.out_words)
+            masks = tuple(sess.tail_mask(nb, w) for nb, w
+                          in zip(n_bits_list, plan.all_root_words))
             if layout is not None:
-                mask = dev.arena.to_compute(mask)
-            return fn(group_vth, fused_vth, mask)
+                masks = tuple(dev.arena.to_compute(m) for m in masks)
+            return fn(group_vth, fused_vth, masks)
 
-    def _account(self, plan: ExecPlan, placed: bool = False) -> None:
+    def _account(self, plan: ExecPlan, placed: bool = False,
+                 attributed: bool = False) -> None:
         """Wave-batched ledger + counter updates: ONE parallel die step and
         one channel step per schedule wave (concurrent per-die groups in a
         wave overlap in the ledger's die-parallel makespan), each labeled
@@ -656,6 +776,7 @@ class Executor:
         # compares them only within one epoch
         dev.ledger.begin_epoch()
         n_fused = n_chunks = 0
+        n_coalesced = n_shared_waves = 0
         for wi, wave in enumerate(plan.waves):
             per_die: Dict[int, float] = {}
             per_ch: Dict[int, float] = {}
@@ -663,8 +784,13 @@ class Executor:
             cmds = 0
             units: List[Tuple[Dict[int, float], float, List]] = []
             parts: List[str] = []
+            wave_rids: set = set()
             for gi in wave.groups:
                 g = plan.groups[gi]
+                g_rids = g.rids
+                wave_rids.update(g_rids)
+                if len(g_rids) > 1:
+                    n_coalesced += 1
                 # the plan's own phase count drives timing/energy — encoded
                 # (TLC / reduced-MLC) op labels are not in the Table-1 maps
                 cost = (dev.mcflash_cost(g.wls, g.op_label,
@@ -676,6 +802,7 @@ class Executor:
                 parts.append(f"{g.op_label}x{len(g.wls)}p")
             for si in wave.fused:
                 f = plan.steps[si].fused
+                wave_rids.update(f.rids)
                 units.append((*dev.mcflash_cost(
                     f.wls, f.op_label, phases=f.plan.sensing_phases), f.wls))
                 parts.append(f"fused:{f.op_label}x{f.n_operands}")
@@ -695,15 +822,21 @@ class Executor:
                 uj += unit_uj
                 cmds += len(wls)
             label = f"wave {wi}: {'+'.join(parts)}" if parts else None
+            rid_tag = tuple(sorted(wave_rids)) or None
+            if len(wave_rids) > 1:
+                n_shared_waves += 1
             if per_die:
                 dev.ledger.add_die_batch(per_die, uj, commands=cmds,
-                                         label=label, wave=wi)
+                                         label=label, wave=wi, rids=rid_tag)
                 sess.metrics.histogram("wave_dies").observe(len(per_die))
             if per_ch:
                 dev.ledger.add_channel_batch(
                     per_ch, label=f"wave {wi}: dma" if parts else None,
-                    wave=wi)
+                    wave=wi, rids=rid_tag)
         m = sess.metrics
+        if attributed:
+            m.counter("coalesced_sense_groups").add(n_coalesced)
+            m.counter("waves_shared").add(n_shared_waves)
         if placed:
             m.counter("placed_unit_dispatches").add(len(plan.groups) + n_fused)
         m.counter("in_flash_senses").add(plan.senses)
@@ -719,10 +852,11 @@ class Executor:
             1 for st in plan.steps if len(st.args) > 1 or st.invert
             or st.fused is not None))
 
-    def _build(self, plan: ExecPlan, popcount: bool):
+    def _build(self, plan: ExecPlan, popcounts: Tuple[bool, ...]):
         """Close a jitted executable over the static plan.  Runtime inputs:
-        the gathered per-group / per-fused-step Vth stacks and the packed
-        padding mask — shapes fixed by the plan signature.
+        the gathered per-group / per-fused-step Vth stacks and one packed
+        padding mask per batch root — shapes fixed by the plan signature.
+        Returns a tuple of outputs, one per root in batch order.
 
         The closure captures only the (stateless) backend, the static plan,
         and a trace-counter cell — never the executor/session, which would
@@ -730,10 +864,11 @@ class Executor:
         backend = self.session.backend
         traces = self._traces
         max_ops = self.max_fused_operands
-        # popcount folds into the root megakernel only when the root IS the
-        # last step and that step fused (a fused root consumes raw wordlines,
-        # so nothing else in the plan feeds it)
-        fuse_pc = (popcount and bool(plan.steps)
+        roots = plan.all_roots
+        # popcount folds into the root megakernel only on a single-root plan
+        # whose root IS the last step and that step fused (a fused root
+        # consumes raw wordlines, so nothing else in the plan feeds it)
+        fuse_pc = (len(roots) == 1 and popcounts[0] and bool(plan.steps)
                    and plan.steps[-1].out == plan.root
                    and plan.steps[-1].fused is not None)
         fused_pos = {si: k for k, si in enumerate(
@@ -751,7 +886,7 @@ class Executor:
                      for s in range(0, f.n_operands, max_ops)]
             return backend.reduce(jnp.stack(parts), st.op, invert=st.invert)
 
-        def run(group_vth, fused_vth, mask):
+        def run(group_vth, fused_vth, masks):
             traces.n += 1             # Python side effect: fires at trace time
             partials: Dict[int, jnp.ndarray] = {}
             for wave in plan.waves:
@@ -766,7 +901,7 @@ class Executor:
                     vth = fused_vth[fused_pos[si]].reshape(
                         f.n_operands, f.n_pages, -1)
                     if fuse_pc and st.out == plan.root:
-                        mask2 = mask.reshape(f.n_pages, -1)
+                        mask2 = masks[0].reshape(f.n_pages, -1)
                         if f.n_operands <= max_ops:
                             counts = backend.sense_reduce_popcount(
                                 vth, f.plan, mask2, op=st.op,
@@ -775,7 +910,7 @@ class Executor:
                             words = fused_reduce(st, vth).reshape(
                                 f.n_pages, -1) & mask2
                             counts = backend.popcount(words)
-                        return jnp.sum(counts, dtype=jnp.int32)
+                        return (jnp.sum(counts, dtype=jnp.int32),)
                     partials[st.out] = fused_reduce(st, vth).reshape(-1)
                 for ci in wave.combines:
                     st = plan.steps[ci]
@@ -787,14 +922,16 @@ class Executor:
                             stack.reshape(len(st.args), 1, -1),
                             st.op, invert=st.invert)
                         partials[st.out] = out.reshape(-1)
-            out = partials[plan.root] & mask
-            if popcount:
-                return backend.popcount(out.reshape(1, -1))[0]
-            return out
+            outs = []
+            for root, pc, mask in zip(roots, popcounts, masks):
+                out = partials[root] & mask
+                outs.append(backend.popcount(out.reshape(1, -1))[0]
+                            if pc else out)
+            return tuple(outs)
 
         return jax.jit(run)
 
-    def _build_placed(self, plan: ExecPlan, popcount: bool):
+    def _build_placed(self, plan: ExecPlan, popcounts: Tuple[bool, ...]):
         """Close a device-placed wave runner over the static plan.
 
         Unlike :meth:`_build`, this is NOT one monolithic ``jax.jit`` — a
@@ -820,7 +957,8 @@ class Executor:
         # dispatches follow input placement eagerly, so there is no single
         # jit trace: count the build itself as the one trace event
         self._traces.n += 1
-        fuse_pc = (popcount and bool(plan.steps)
+        roots = plan.all_roots
+        fuse_pc = (len(roots) == 1 and popcounts[0] and bool(plan.steps)
                    and plan.steps[-1].out == plan.root
                    and plan.steps[-1].fused is not None)
         fused_pos = {si: k for k, si in enumerate(
@@ -836,7 +974,7 @@ class Executor:
                      for s in range(0, f.n_operands, max_ops)]
             return backend.reduce(jnp.stack(parts), st.op, invert=st.invert)
 
-        def run(group_vth, fused_vth, mask):
+        def run(group_vth, fused_vth, masks):
             partials: Dict[int, jnp.ndarray] = {}
             for wave in plan.waves:
                 # per-die sense groups and fused megakernels of one wave:
@@ -853,7 +991,7 @@ class Executor:
                     vth = fused_vth[fused_pos[si]].reshape(
                         f.n_operands, f.n_pages, -1)
                     if fuse_pc and st.out == plan.root:
-                        mask2 = colocate(mask, vth).reshape(f.n_pages, -1)
+                        mask2 = colocate(masks[0], vth).reshape(f.n_pages, -1)
                         if f.n_operands <= max_ops:
                             counts = backend.sense_reduce_popcount(
                                 vth, f.plan, mask2, op=st.op,
@@ -862,7 +1000,7 @@ class Executor:
                             words = fused_reduce(st, vth).reshape(
                                 f.n_pages, -1) & mask2
                             counts = backend.popcount(words)
-                        return jnp.sum(counts, dtype=jnp.int32)
+                        return (jnp.sum(counts, dtype=jnp.int32),)
                     partials[st.out] = fused_reduce(st, vth).reshape(-1)
                 for ci in wave.combines:
                     st = plan.steps[ci]
@@ -877,9 +1015,11 @@ class Executor:
                             stack.reshape(len(st.args), 1, -1),
                             st.op, invert=st.invert)
                         partials[st.out] = out.reshape(-1)
-            out = to_compute(partials[plan.root]) & mask
-            if popcount:
-                return backend.popcount(out.reshape(1, -1))[0]
-            return out
+            outs = []
+            for root, pc, mask in zip(roots, popcounts, masks):
+                out = to_compute(partials[root]) & mask
+                outs.append(backend.popcount(out.reshape(1, -1))[0]
+                            if pc else out)
+            return tuple(outs)
 
         return run

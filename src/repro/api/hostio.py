@@ -39,12 +39,14 @@ class DrainHandle:
     ``np.ndarray`` (memoized — repeat calls are free).
     """
 
-    __slots__ = ("_array", "_out", "n_bytes")
+    __slots__ = ("_array", "_out", "n_bytes", "rid")
 
-    def __init__(self, array, n_bytes: int) -> None:
+    def __init__(self, array, n_bytes: int, rid: Optional[int] = None) -> None:
         self._array = array
         self._out: Optional[np.ndarray] = None
         self.n_bytes = int(n_bytes)
+        #: owning request id (serving engine attribution), or None
+        self.rid = rid
         # start the DMA now; resolution in result() then only waits, it
         # doesn't initiate (older jax backends without the hook degrade to
         # a synchronous copy at result() time)
@@ -54,8 +56,26 @@ class DrainHandle:
 
     @property
     def done(self) -> bool:
-        """True once :meth:`result` has resolved (not a transfer probe)."""
-        return self._out is not None
+        """True once the bytes are host-resident — a non-blocking probe.
+
+        Resolution order: a memoized :meth:`result` is definitively done; a
+        plain ``np.ndarray`` submission is already host memory; otherwise ask
+        the backend's ``jax.Array.is_ready()`` when it exists (True only once
+        the async copy has landed).  Backends without the probe report False
+        until :meth:`result` resolves — callers must treat ``done`` as a
+        readiness *hint*, never a completion requirement.
+        """
+        if self._out is not None:
+            return True
+        if isinstance(self._array, np.ndarray):
+            return True
+        probe = getattr(self._array, "is_ready", None)
+        if callable(probe):
+            try:
+                return bool(probe())
+            except Exception:
+                return False
+        return False
 
     def result(self) -> np.ndarray:
         if self._out is None:
@@ -85,12 +105,14 @@ class HostDrainQueue:
     def __len__(self) -> int:
         return len(self._pending)
 
-    def submit(self, array, n_bytes: Optional[int] = None) -> DrainHandle:
+    def submit(self, array, n_bytes: Optional[int] = None,
+               rid: Optional[int] = None) -> DrainHandle:
         """Enqueue one result transfer; blocks on the oldest in-flight
-        transfer when the queue is full (the double-buffer bound)."""
+        transfer when the queue is full (the double-buffer bound).  ``rid``
+        tags the handle with the owning request id (serving attribution)."""
         if n_bytes is None:
             n_bytes = int(array.size) * array.dtype.itemsize
-        handle = DrainHandle(array, n_bytes)
+        handle = DrainHandle(array, n_bytes, rid=rid)
         if self._on_submit is not None:
             self._on_submit(handle.n_bytes)
         self._pending.append(handle)

@@ -184,12 +184,14 @@ class Ledger:
     def add_die_batch(self, per_die_us: Mapping[int, float], uj: float = 0.0,
                       commands: int = 1, category: str = "sense",
                       label: "str | None" = None,
-                      wave: "int | None" = None) -> None:
+                      wave: "int | None" = None,
+                      rids: "Tuple[int, ...] | None" = None) -> None:
         """Account one parallel dispatch step in one call (no O(pages) loop):
         ``per_die_us`` is pre-aggregated busy time per die; the named dies
         run concurrently, so the step takes ``max`` of their busy times.
         ``label`` names the step's spans on an attached tracer; ``wave``
-        tags the executor schedule wave for the overlap audit."""
+        tags the executor schedule wave for the overlap audit; ``rids``
+        tags the owning serving-request ids for per-request attribution."""
         total = 0.0
         for die, us in per_die_us.items():
             self.die_busy_us[die] = self.die_busy_us.get(die, 0.0) + us
@@ -210,6 +212,8 @@ class Ledger:
                 if wave is not None:
                     args["wave"] = wave
                     args["epoch"] = self.step_epoch
+                if rids:
+                    args["rids"] = list(rids)
                 if self.mode == "overlap" and overlap_us > 0.0:
                     args["overlap_us"] = round(overlap_us, 6)
                 self.tracer.die_step(t0, per_die_us, category, label, args)
@@ -228,7 +232,8 @@ class Ledger:
     def add_channel_batch(self, per_channel_us: Mapping[int, float],
                           label: "str | None" = None,
                           category: str = "dma",
-                          wave: "int | None" = None) -> None:
+                          wave: "int | None" = None,
+                          rids: "Tuple[int, ...] | None" = None) -> None:
         """Batched NAND->controller transfer accounting, one parallel step per
         call (channels named together stream concurrently).  ``category``
         lets recovery re-senses book their transfers separately from the
@@ -242,10 +247,13 @@ class Ledger:
             dur = max(per_channel_us.values())
             t0 = self._channel_start()
             if self.tracer is not None:
-                args = None
+                args = {}
                 if wave is not None:
                     args = {"wave": wave, "epoch": self.step_epoch}
-                self.tracer.channel_step(t0, per_channel_us, label, args)
+                if rids:
+                    args["rids"] = list(rids)
+                self.tracer.channel_step(t0, per_channel_us, label,
+                                         args or None)
                 self._sync_meta()
             self.channel_end_us = t0 + dur
             self.channel_step_us += dur

@@ -20,7 +20,8 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Dict, Iterable, List, Tuple
+from collections import OrderedDict
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -55,7 +56,15 @@ _SESSION_COUNTERS = (
     ("placed_unit_dispatches", "wave units dispatched on pinned shard devices"),
     ("host_drain_submits", "async controller->host transfers enqueued"),
     ("host_drain_blocks", "drain-queue backpressure stalls (queue full)"),
+    ("coalesced_sense_groups", "batch sense groups shared by >1 request"),
+    ("waves_shared", "schedule waves carrying work of >1 request"),
+    ("tail_mask_evictions", "tail-mask cache entries evicted (LRU bound)"),
 )
+
+#: per-shape tail-mask cache bound — big enough for steady-state serving
+#: mixes (a handful of distinct (n_bits, words) shapes), small enough that
+#: adversarially varied n_bits traffic cannot grow the session unboundedly
+TAIL_MASK_CACHE_CAP = 32
 
 
 class ComputeSession:
@@ -168,7 +177,8 @@ class ComputeSession:
         if trace:
             self.trace = trace if isinstance(trace, Tracer) else Tracer()
             self.ledger.tracer = self.trace
-        self._tail_masks: Dict[Tuple[int, int], jnp.ndarray] = {}
+        self._tail_masks: "OrderedDict[Tuple[int, int], jnp.ndarray]" = \
+            OrderedDict()
         #: wear/retention fault injection + recovery (reliability layer):
         #: ``faults=`` (or ``$REPRO_FAULTS``) installs the seeded
         #: :class:`FaultModel` on the device — any spec
@@ -336,10 +346,82 @@ class ComputeSession:
         returns the packed host arrays in submit order."""
         return [h.result() for h in self.host_queue.drain()]
 
+    # -- cross-request batch execution (the serving engine's dispatch) -------
+    def lower_batch(self, exprs: Sequence[BitVector],
+                    rids: "Optional[Sequence[int]]" = None) -> ExecPlan:
+        """Lower a batch of expressions through ONE shared pass without
+        dispatching: identical sub-DAGs dedupe and same-(ReadPlan, die)
+        senses coalesce into shared groups/waves.  ``rids`` tags the plan's
+        sense items with owning request ids (trace/metrics attribution)."""
+        return self.executor.lower_many(
+            [simplify(e.node) for e in exprs],
+            list(rids) if rids is not None else None)
+
+    def _run_batch(self, exprs: Sequence[BitVector],
+                   popcounts: Tuple[bool, ...],
+                   rids: "Optional[Sequence[int]]" = None) -> List[jnp.ndarray]:
+        """Shared batch dispatch: one coalesced executor run; under the
+        reliability layer every root materializes as words first (the fused
+        on-device popcount would hide bit errors), is verified/recovered per
+        root, and counts fold host-side."""
+        nodes = [simplify(e.node) for e in exprs]
+        n_bits = [e.n_bits for e in exprs]
+        rid_list = list(rids) if rids is not None else None
+        if self.reliability is not None:
+            outs = self.executor.run_batch(nodes, n_bits,
+                                           (False,) * len(nodes),
+                                           rids=rid_list)
+            fixed: List[jnp.ndarray] = []
+            for node, nb, pc, packed in zip(nodes, n_bits, popcounts, outs):
+                packed = self.reliability.verify_and_recover(node, nb, packed)
+                fixed.append(self.backend.popcount(packed.reshape(1, -1))[0]
+                             if pc else packed)
+            return fixed
+        return self.executor.run_batch(nodes, n_bits, popcounts,
+                                       rids=rid_list)
+
+    def materialize_batch(self, exprs: Sequence[BitVector], *,
+                          popcount: "Optional[Sequence[bool]]" = None,
+                          rids: "Optional[Sequence[int]]" = None,
+                          to_host: bool = True) -> List:
+        """Materialize N expressions through ONE coalesced lowering+dispatch
+        (cross-request wave coalescing): returns one packed word array — or
+        ``int`` count where ``popcount[i]`` — per expression, in order.
+        Bit-exact vs. materializing each expression separately."""
+        popcounts = (tuple(bool(p) for p in popcount) if popcount is not None
+                     else (False,) * len(exprs))
+        assert len(popcounts) == len(exprs), (len(popcounts), len(exprs))
+        outs = self._run_batch(exprs, popcounts, rids)
+        results: List = []
+        for out, pc in zip(outs, popcounts):
+            if to_host:
+                self.device.ext_to_host(4 if pc else int(out.shape[-1]) * 4)
+            results.append(int(out) if pc else out)
+        return results
+
+    def materialize_batch_async(self, exprs: Sequence[BitVector], *,
+                                popcount: "Optional[Sequence[bool]]" = None,
+                                rids: "Optional[Sequence[int]]" = None
+                                ) -> List[DrainHandle]:
+        """Batch variant of :meth:`materialize_async`: one coalesced dispatch,
+        then every root's result streams host-ward through the bounded drain
+        queue — one rid-tagged :class:`DrainHandle` per expression, in order.
+        The queue bound applies per submission, so a batch wider than the
+        drain depth resolves its oldest transfers inline (backpressure)."""
+        popcounts = (tuple(bool(p) for p in popcount) if popcount is not None
+                     else (False,) * len(exprs))
+        assert len(popcounts) == len(exprs), (len(popcounts), len(exprs))
+        outs = self._run_batch(exprs, popcounts, rids)
+        rid_list = list(rids) if rids is not None else [None] * len(exprs)
+        return [self.host_queue.submit(out, rid=rid)
+                for out, rid in zip(outs, rid_list)]
+
     def tail_mask(self, n_bits: int, total_words: int) -> jnp.ndarray:
         """Packed (total_words,) mask zeroing page-padding bits past
         ``n_bits`` (inverse-read ops turn padded zeros into ones, which would
-        corrupt popcounts and packed consumers).  Cached per shape."""
+        corrupt popcounts and packed consumers).  Cached per shape under a
+        small LRU bound (:data:`TAIL_MASK_CACHE_CAP`) — many-request traffic
+        with varied ``n_bits`` must not grow the session without bound."""
         total = total_words * 32
         key = (min(n_bits, total), total)
         mask = self._tail_masks.get(key)
@@ -351,6 +433,11 @@ class ComputeSession:
                 bits[:n_bits] = 1
                 mask = kops.pack_bits(jnp.asarray(bits).reshape(1, -1))[0]
             self._tail_masks[key] = mask
+            while len(self._tail_masks) > TAIL_MASK_CACHE_CAP:
+                self._tail_masks.popitem(last=False)
+                self.metrics.counter("tail_mask_evictions").add(1)
+        else:
+            self._tail_masks.move_to_end(key)
         return mask
 
     def popcount(self, expr: BitVector, *, to_host: bool = True) -> int:
@@ -392,6 +479,11 @@ class ComputeSession:
                            "blocks": self.host_drain_blocks,
                            "pending": len(self.host_queue),
                            "depth": self.host_queue.depth},
+            "coalesced_sense_groups": self.coalesced_sense_groups,
+            "waves_shared": self.waves_shared,
+            "tail_mask_cache": {"size": len(self._tail_masks),
+                                "cap": TAIL_MASK_CACHE_CAP,
+                                "evictions": self.tail_mask_evictions},
             "plans_verified": self.verifier.plans_verified,
             "verify_cache_hits": self.verifier.cache_hits,
             "verify": {"mode": self.verifier.mode,

@@ -118,6 +118,22 @@ class Tracer:
     def _now_us(self) -> float:
         return (time.perf_counter() - self._epoch) * 1e6
 
+    def now_us(self) -> float:
+        """Current wall-clock offset (us since tracer creation) — the time
+        base of :meth:`mark_span` and :meth:`span`."""
+        return self._now_us()
+
+    def mark_span(self, category: str, name: str, start_us: float,
+                  dur_us: float, **args) -> None:
+        """Record a wall-clock span from explicit endpoints.
+
+        The serving engine uses this for request-lifecycle spans (admit ->
+        complete): the endpoints are known only after the fact, so the
+        :meth:`span` context manager's bracketing doesn't fit."""
+        self._push(self.wall_spans,
+                   Span(name, category, "wall", float(start_us),
+                        max(0.0, float(dur_us)), dict(args)))
+
     @contextlib.contextmanager
     def span(self, category: str, name: str, **args):
         """Wall-clock span around a host-side phase (lowering, compile,

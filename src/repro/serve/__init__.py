@@ -1,3 +1,7 @@
-from repro.serve.engine import Engine, ServeConfig
+"""Serving layer: the bitmap-query engine (package headline) plus the
+batched LM decode path it superseded (kept alive as ``lm_engine``)."""
+from repro.serve.engine import QueryEngine, QueryTicket, SLOConfig
+from repro.serve.lm_engine import Engine, ServeConfig
 
-__all__ = ["Engine", "ServeConfig"]
+__all__ = ["QueryEngine", "QueryTicket", "SLOConfig",
+           "Engine", "ServeConfig"]

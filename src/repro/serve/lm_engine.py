@@ -1,0 +1,78 @@
+"""Batched LM serving engine: prefill + greedy/temperature decode.
+
+The decode path is the same ``decode_step`` the dry-run lowers for the
+``decode_*`` / ``long_*`` shape cells; here it runs end-to-end on CPU-sized
+models (examples/serve_lm.py) with per-request continuous batching slots.
+
+This was ``repro.serve.engine`` until the bitmap-query
+:class:`~repro.serve.engine.QueryEngine` took over as the package headline;
+the LM path lives on here unchanged except for one fix: ``generate`` used to
+run one *dead* decode step per call (the loop appended the pending token
+first and then decoded even on the final iteration, discarding that last
+jitted step's logits).  The loop now stops decoding once the final token is
+emitted — ``decode_calls`` counts exactly ``max_new_tokens - 1`` steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.specs import init_tree
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_seq: int = 512
+    temperature: float = 0.0      # 0 => greedy
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, cfg, params, serve_cfg: ServeConfig | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = serve_cfg or ServeConfig()
+        #: decode_step invocations across generate() calls — the regression
+        #: guard for the dead-final-decode bug (must equal tokens decoded,
+        #: i.e. max_new_tokens - 1 per call, never max_new_tokens)
+        self.decode_calls = 0
+        self._decode = jax.jit(
+            lambda p, t, c, i: lm.decode_step(p, cfg, t, c, i))
+        self._prefill = jax.jit(
+            lambda p, b, c: lm.prefill(p, cfg, b, c))
+
+    @classmethod
+    def from_seed(cls, cfg, seed: int = 0, **kw):
+        params = init_tree(jax.random.PRNGKey(seed), lm.build_specs(cfg))
+        return cls(cfg, params, **kw)
+
+    def generate(self, prompts: jnp.ndarray, max_new_tokens: int = 32,
+                 key: jax.Array | None = None) -> jnp.ndarray:
+        """prompts: (B, S0) int32 -> (B, S0 + max_new_tokens)."""
+        b, s0 = prompts.shape
+        caches = lm.init_cache(self.cfg, b, self.scfg.max_seq)
+        logits, caches = self._prefill(self.params, {"tokens": prompts}, caches)
+        out = [prompts]
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        key = key if key is not None else jax.random.PRNGKey(self.scfg.seed)
+        for i in range(max_new_tokens):
+            out.append(tok)
+            if i + 1 == max_new_tokens:
+                # the token just emitted completes the request: decoding
+                # again would compute logits nobody consumes (the dead
+                # jitted step this loop used to pay on every call)
+                break
+            self.decode_calls += 1
+            logits, caches = self._decode(self.params, tok, caches,
+                                          jnp.asarray(s0 + i, jnp.int32))
+            nxt = logits[:, -1]
+            if self.scfg.temperature > 0:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(
+                    sub, nxt / self.scfg.temperature)[:, None].astype(jnp.int32)
+            else:
+                tok = jnp.argmax(nxt, axis=-1)[:, None].astype(jnp.int32)
+        return jnp.concatenate(out, axis=1)

@@ -131,8 +131,13 @@ def render_plan(plan, highlight: Optional[int] = None,
                  + [_unit_desc(plan, "combine", ci) for ci in wave.combines])
         mark = ">>" if wi == highlight else "  "
         lines.append(f"{mark}wave {wi}: " + ("; ".join(parts) or "(empty)"))
-    lines.append(f"  root=p{plan.root} out_pages={plan.out_pages}"
-                 f" out_words={plan.out_words}")
+    roots = getattr(plan, "roots", ()) or ()
+    if roots:
+        lines.append(f"  roots={','.join(f'p{r}' for r in roots)}"
+                     f" words={getattr(plan, 'roots_words', ())}")
+    else:
+        lines.append(f"  root=p{plan.root} out_pages={plan.out_pages}"
+                     f" out_words={plan.out_words}")
     return "\n".join(lines)
 
 
@@ -256,6 +261,24 @@ def check_ledger_conservation(plan, ctx: PlanContext) -> None:
             f"out_words={plan.out_words} != out_pages({plan.out_pages})"
             f" * page_words({ctx.page_words}): the root transfer would be"
             " mis-sized", plan=plan)
+    # batch plans: each root's declared word geometry must match its pages
+    # (getattr fallbacks keep hand-built single-root plans checkable)
+    roots = getattr(plan, "roots", ()) or ()
+    roots_pages = getattr(plan, "roots_pages", ()) or ()
+    roots_words = getattr(plan, "roots_words", ()) or ()
+    if roots and not (len(roots) == len(roots_pages) == len(roots_words)):
+        raise PlanInvariantError(
+            "ledger-conservation",
+            f"batch plan declares {len(roots)} roots but"
+            f" {len(roots_pages)} page counts / {len(roots_words)} word"
+            " counts", plan=plan)
+    for ri, (pages, words) in enumerate(zip(roots_pages, roots_words)):
+        if words != pages * ctx.page_words:
+            raise PlanInvariantError(
+                "ledger-conservation",
+                f"batch root[{ri}]: {words} words != {pages} pages *"
+                f" page_words({ctx.page_words}) — that request's transfer"
+                " would be mis-sized", plan=plan)
 
 
 def check_wave_die_disjoint(plan, ctx: PlanContext) -> None:
@@ -351,10 +374,13 @@ def check_schedule_topology(plan, ctx: PlanContext) -> None:
                         " be produced at a strictly earlier position",
                         plan=plan, wave=wi, unit=f"combine[{ci}]")
             produce(st.out, pos, f"combine[{ci}]", wi)
-    if plan.root not in produced:
-        raise PlanInvariantError(
-            "schedule-topology",
-            f"root partial p{plan.root} is never produced", plan=plan)
+    # every batch root must be produced (single-root plans degrade to the
+    # scalar root; getattr keeps hand-built plans checkable)
+    for root in (getattr(plan, "roots", ()) or (plan.root,)):
+        if root not in produced:
+            raise PlanInvariantError(
+                "schedule-topology",
+                f"root partial p{root} is never produced", plan=plan)
 
 
 def check_vmem_budget(plan, ctx: PlanContext) -> None:

@@ -135,7 +135,9 @@ def test_session_stats_keys_unchanged_and_attr_reads():
                       "arena_shards", "ledger",
                       "plans_verified", "verify_cache_hits", "verify",
                       "faults", "reliability",
-                      "placed_unit_dispatches", "host_drain"}
+                      "placed_unit_dispatches", "host_drain",
+                      "coalesced_sense_groups", "waves_shared",
+                      "tail_mask_cache"}
     # pre-registry attribute reads still work and are plain ints
     for name in ("fused_reduce_calls", "in_flash_senses", "sense_items",
                  "sense_batches", "sense_waves", "megakernel_calls",
